@@ -1,0 +1,44 @@
+"""Shared helpers for the benchmark harness."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import admm
+from repro.core.topology import Exchange, Ring
+from repro.problems.logistic import LogisticProblem
+
+
+def make_problem(seed=0):
+    prob = LogisticProblem()
+    data = prob.make_data(jax.random.key(seed))
+    topo = Ring(prob.n_agents)
+    ex = Exchange(topo)
+    return prob, data, topo, ex
+
+
+def run_admm(prob, data, topo, ex, cfg, est, rounds, metric_every=10):
+    """Scan-driven run; returns (rounds_idx, gradnorm_sq) arrays."""
+    st = admm.init(cfg, topo, ex, jnp.zeros((topo.n_agents, prob.n)))
+
+    def body(st, i):
+        st = admm.step(cfg, topo, ex, est, st, data, jax.random.fold_in(
+            jax.random.key(12345), i))
+        xbar = jnp.mean(st.x, axis=0)
+        gn = prob.global_grad_norm_sq(xbar, data)
+        return st, gn
+
+    st, gns = jax.lax.scan(body, st, jnp.arange(rounds))
+    idx = jnp.arange(rounds)
+    return idx[::metric_every], gns[::metric_every]
+
+
+def timeit(fn, *args, iters=5):
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6  # us

@@ -1,0 +1,53 @@
+"""Kernel microbenchmarks (CPU wall time, interpret mode — structural only;
+the derived column reports achieved vs theoretical wire-compression ratio
+and FLOP counts, which ARE hardware-independent)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import timeit
+from repro.kernels.flash_attention import ops as flash_ops
+from repro.kernels.quantize import ops as q_ops
+from repro.kernels.ssm_scan.kernel import ssd_scan
+
+KEY = jax.random.key(0)
+
+
+def run(print_rows=True):
+    rows = []
+    # quantize: wire ratio
+    x = jax.random.normal(KEY, (1 << 16,))
+    us = timeit(lambda: q_ops.quantize_tensor(KEY, x, bits=8))
+    payload = q_ops.quantize_tensor(KEY, x, bits=8)
+    ratio = x.nbytes / payload["q"].nbytes
+    rows.append(("kernel/quantize8_64k", us, f"wire_ratio={ratio:.2f}"))
+    us = timeit(lambda: q_ops.quantize_tensor(KEY, x, bits=4))
+    payload = q_ops.quantize_tensor(KEY, x, bits=4)
+    rows.append(("kernel/quantize4_64k", us,
+                 f"wire_ratio={x.nbytes / payload['q'].nbytes:.2f}"))
+
+    # flash attention: flops
+    b, t, h, dh = 1, 512, 4, 64
+    q = jax.random.normal(KEY, (b, t, h, dh))
+    k = jax.random.normal(KEY, (b, t, 2, dh))
+    v = jax.random.normal(KEY, (b, t, 2, dh))
+    us = timeit(lambda: flash_ops.flash_attention(q, k, v), iters=2)
+    flops = 4 * b * h * t * t * dh / 2  # causal
+    rows.append(("kernel/flash_512", us, f"causal_flops={flops:.3g}"))
+
+    # ssd scan
+    x2 = jax.random.normal(KEY, (1, 4, 512, 64)) * 0.3
+    al = -jnp.abs(jax.random.normal(KEY, (1, 4, 512))) * 0.2
+    bm = jax.random.normal(KEY, (1, 4, 512, 16)) * 0.3
+    us = timeit(lambda: ssd_scan(x2, al, bm, bm, chunk=128), iters=2)
+    rows.append(("kernel/ssd_512", us, "chunk=128"))
+
+    if print_rows:
+        for r in rows:
+            print(f"# kernels {r[0]:24s} {r[1]:.0f}us {r[2]}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

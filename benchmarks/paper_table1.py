@@ -1,0 +1,44 @@
+"""Paper Table I: computation time of the algorithms over tau iterations,
+in (t_g, t_c) units — mechanical check of the cost accounting plus the
+byte-level wire accounting our TPU mapping adds on top."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import admm, compression
+from repro.core.costmodel import CostModel
+from repro.core.topology import Ring
+
+
+def run(print_rows=True):
+    cm = CostModel(t_g=1.0, t_c=10.0)
+    m, tau = 100, 5
+    rows = [
+        ("table1/lead", cm.lead(tau)),
+        ("table1/cedas", cm.cedas(tau)),
+        ("table1/cold_dpdc_sgd", cm.cold_dpdc_sgd(tau)),
+        ("table1/cold_dpdc_full", cm.cold_dpdc_full(tau, m)),
+        ("table1/lt-admm-cc", cm.lt_admm_cc(m, tau)),
+    ]
+    # wire bytes per round for a 1M-param model, ring of 10
+    params = {"w": jnp.zeros((1_000_000,), jnp.float32)}
+    topo = Ring(10)
+    for name, comp in [
+        ("f32", compression.Identity()),
+        ("q8", compression.BBitQuantizer(8)),
+        ("q4", compression.BBitQuantizer(4)),
+        ("randk25", compression.RandK(fraction=0.25, sampler="block")),
+    ]:
+        cfg = admm.LTADMMConfig(compressor_x=comp, compressor_z=comp)
+        rows.append(
+            (f"table1/wire_bytes_{name}",
+             admm.wire_bytes_per_round(cfg, topo, params))
+        )
+    if print_rows:
+        for r in rows:
+            print(f"# table1 {r[0]:28s} {r[1]}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

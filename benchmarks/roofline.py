@@ -1,0 +1,60 @@
+"""Roofline table: reads the dry-run records (results/dryrun.jsonl) and
+prints per (arch x shape x mesh) the three roofline terms, the dominant
+bottleneck, and the useful-FLOP fraction.  This is the §Roofline deliverable
+renderer; it performs no lowering itself (run repro.launch.dryrun first)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+DEFAULT_PATH = os.path.join(
+    os.path.dirname(__file__), "..", "results", "dryrun*.jsonl"
+)
+
+
+def load(path=DEFAULT_PATH):
+    records = []
+    for fn in sorted(glob.glob(path)):
+        with open(fn) as f:
+            records.extend(json.loads(line) for line in f if line.strip())
+    return records
+
+
+def rows(records):
+    out = []
+    for r in records:
+        rl = r["roofline"]
+        out.append({
+            "name": f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}",
+            "t_comp": rl["t_compute_s"],
+            "t_mem": rl["t_memory_s"],
+            "t_coll": rl["t_collective_s"],
+            "dominant": rl["dominant"],
+            "useful": r.get("useful_fraction"),
+            "bytes_per_dev": r["bytes_per_device"]["total_live"],
+        })
+    return out
+
+
+def run(print_rows=True, path=DEFAULT_PATH):
+    records = load(path)
+    table = rows(records)
+    if print_rows:
+        if not table:
+            print("# roofline: no dry-run records yet "
+                  "(python -m repro.launch.dryrun --all --out "
+                  "results/dryrun.jsonl)")
+        for t in table:
+            u = f"{t['useful']:.2f}" if t["useful"] else "n/a"
+            print(
+                f"# {t['name']:55s} comp={t['t_comp']:8.3f}s "
+                f"mem={t['t_mem']:8.1f}s coll={t['t_coll']:7.2f}s "
+                f"dom={t['dominant']:10s} useful={u} "
+                f"dev_bytes={t['bytes_per_dev'] / 1e9:.1f}GB"
+            )
+    return [(t["name"], t["t_comp"], t["dominant"]) for t in table]
+
+
+if __name__ == "__main__":
+    run()

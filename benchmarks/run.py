@@ -1,0 +1,35 @@
+"""Benchmark harness — one entry per paper table/figure + kernels + roofline.
+
+Prints ``name,us_per_call,derived`` CSV rows (us_per_call is blank for
+convergence benchmarks, whose cost is in simulated (t_g, t_c) units).
+Run:  PYTHONPATH=src python -m benchmarks.run
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks import kernels_bench, paper_fig1, paper_fig2, paper_table1
+    from benchmarks import roofline
+
+    t0 = time.time()
+    print("name,us_per_call,derived")
+    for name, final, rate, wire in paper_fig1.run(print_rows=False):
+        print(f"{name},,final_gradnorm2={final:.3e};rate_per_round={rate:.4f}"
+              f";wire_bytes_per_round={wire}")
+    for name, ttt, floor in paper_fig2.run(print_rows=False):
+        print(f"{name},,time_to_1e-8={ttt:.0f};floor={floor:.3e}")
+    for name, val in paper_table1.run(print_rows=False):
+        print(f"{name},,cost={val}")
+    for name, us, derived in kernels_bench.run(print_rows=False):
+        print(f"{name},{us:.0f},{derived}")
+    for name, t_comp, dom in roofline.run(print_rows=False):
+        print(f"{name},,t_compute_s={t_comp:.4f};dominant={dom}")
+    print(f"# total benchmark wall time: {time.time() - t0:.0f}s",
+          file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

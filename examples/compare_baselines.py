@@ -1,0 +1,21 @@
+"""Fig.-2-style comparison: LT-ADMM-CC vs LEAD/CEDAS/COLD/DPDC under the
+paper's time model (t_c = 10 t_g, 8-bit quantizer, |B| = 1).
+
+    PYTHONPATH=src:. python examples/compare_baselines.py
+"""
+from benchmarks import paper_fig2
+
+
+def main():
+    rows = paper_fig2.run(print_rows=False)
+    print(f"{'algorithm':20s} {'sim. time to 1e-8':>18s} {'floor':>12s}")
+    for name, ttt, floor in rows:
+        t = f"{ttt:.0f}" if ttt != float("inf") else "never"
+        print(f"{name.split('/')[-1]:20s} {t:>18s} {floor:>12.2e}")
+    print("\nonly LT-ADMM-CC reaches exactness with stochastic gradients; "
+          "the exact full-gradient baselines pay ~m x more compute per "
+          "communication round.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Quickstart: reproduce the paper's core result in ~1 minute on CPU.
+
+LT-ADMM-CC on the paper's logistic-regression task (ring N=10, n=5,
+m_i=100, |B|=1): stochastic gradients + 8-bit compressed messages, yet
+EXACT convergence — ||∇F(x̄_k)||² falls linearly to float32 precision.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core import admm, compression, vr
+from repro.core.topology import Exchange, Ring
+from repro.problems.logistic import LogisticProblem
+
+
+def main():
+    prob = LogisticProblem()  # paper §III settings
+    data = prob.make_data(jax.random.key(0))
+    topo, ex = Ring(prob.n_agents), Exchange(Ring(prob.n_agents))
+
+    cfg = admm.LTADMMConfig(  # paper: tau=5 rho=0.1 beta=0.2 gamma=0.3 r=1
+        compressor_x=compression.BBitQuantizer(bits=8),
+        compressor_z=compression.BBitQuantizer(bits=8),
+    )
+    est = vr.SagaTable(sample_grad=prob.sample_grad, m=prob.m)
+
+    state = admm.init(cfg, topo, ex, jnp.zeros((prob.n_agents, prob.n)))
+    step = jax.jit(lambda s, k: admm.step(cfg, topo, ex, est, s, data, k))
+
+    print("round   ||gradF(xbar)||^2    consensus_err")
+    for r in range(1001):
+        state = step(state, jax.random.key(r))
+        if r % 100 == 0:
+            xbar = jnp.mean(state.x, axis=0)
+            gn = prob.global_grad_norm_sq(xbar, data)
+            print(f"{r:5d}   {float(gn):15.3e}    "
+                  f"{float(admm.consensus_error(state)):12.3e}")
+    print("\nexact convergence with stochastic gradients AND 8-bit "
+          "compression — the paper's headline result.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,21 @@
+"""Serve a small LM with batched greedy decoding (KV-cache path).
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+import os
+import subprocess
+import sys
+
+
+def main():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src" + os.pathsep + env.get("PYTHONPATH", "")
+    raise SystemExit(subprocess.call(
+        [sys.executable, "-m", "repro.launch.serve", "--arch", "zamba2-2.7b",
+         "--smoke", "--batch", "4", "--prompt-len", "8", "--gen", "16"],
+        env=env,
+    ))
+
+
+if __name__ == "__main__":
+    main()

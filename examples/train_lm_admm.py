@@ -1,0 +1,36 @@
+"""End-to-end driver: distributed LM training with LT-ADMM-CC.
+
+Four agents with heterogeneous data shards train a transformer by local
+SVRG steps + compressed ring messages.  Default is a CPU-friendly reduced
+model; --full-100m trains a ~100M-parameter variant (slow on CPU — this is
+the configuration a TPU slice would run).
+
+    PYTHONPATH=src python examples/train_lm_admm.py --rounds 30
+"""
+import argparse
+import subprocess
+import sys
+import os
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=30)
+    ap.add_argument("--full-100m", action="store_true")
+    args = ap.parse_args()
+    cmd = [
+        sys.executable, "-m", "repro.launch.train",
+        "--arch", "xlstm-125m" if args.full_100m else "qwen3-0.6b",
+        "--rounds", str(args.rounds),
+        "--agents", "4", "--compressor", "qbit", "--bits", "8",
+        "--checkpoint", "/tmp/ltadmm_lm_ckpt",
+    ]
+    if not args.full_100m:
+        cmd.append("--smoke")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src" + os.pathsep + env.get("PYTHONPATH", "")
+    raise SystemExit(subprocess.call(cmd, env=env))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+from repro.common import trees  # noqa: F401

@@ -1,0 +1,90 @@
+"""Pytree arithmetic helpers used throughout the framework.
+
+All ADMM / optimizer state is expressed as pytrees mirroring the model
+parameters, so the algorithm code reads like the paper's vector equations.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tree_map(f, *trees):
+    return jax.tree.map(f, *trees)
+
+
+def tree_add(a, b):
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_sub(a, b):
+    return jax.tree.map(jnp.subtract, a, b)
+
+
+def tree_scale(c, a):
+    return jax.tree.map(lambda x: c * x, a)
+
+
+def tree_axpy(c, a, b):
+    """c * a + b."""
+    return jax.tree.map(lambda x, y: c * x + y, a, b)
+
+
+def tree_lerp(a, b, eta):
+    """(1 - eta) * a + eta * b."""
+    return jax.tree.map(lambda x, y: (1.0 - eta) * x + eta * y, a, b)
+
+
+def tree_zeros_like(a):
+    return jax.tree.map(jnp.zeros_like, a)
+
+
+def tree_dot(a, b):
+    leaves = jax.tree.leaves(jax.tree.map(lambda x, y: jnp.vdot(x, y), a, b))
+    return sum(leaves)
+
+
+def tree_sq_norm(a):
+    return tree_dot(a, a)
+
+
+def tree_norm(a):
+    return jnp.sqrt(tree_sq_norm(a))
+
+
+def tree_nbytes(a):
+    """Total bytes of all leaves (static — uses shapes/dtypes only)."""
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(a))
+
+
+def tree_size(a):
+    return sum(x.size for x in jax.tree.leaves(a))
+
+
+def tree_cast(a, dtype):
+    return jax.tree.map(lambda x: x.astype(dtype), a)
+
+
+def tree_stack(trees, axis=0):
+    return jax.tree.map(lambda *xs: jnp.stack(xs, axis=axis), *trees)
+
+
+def tree_index(tree, idx):
+    """tree[idx] along leading axis of every leaf."""
+    return jax.tree.map(lambda x: x[idx], tree)
+
+
+def tree_where(pred, a, b):
+    return jax.tree.map(lambda x, y: jnp.where(pred, x, y), a, b)
+
+
+def tree_broadcast_leading(tree, n):
+    """Tile a tree along a new leading axis of size n."""
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (n,) + x.shape), tree
+    )
+
+
+def tree_all_finite(a):
+    leaves = [jnp.all(jnp.isfinite(x)) for x in jax.tree.leaves(a)]
+    return jnp.all(jnp.stack(leaves))

@@ -1,0 +1,79 @@
+"""Config registry: assigned architectures × input shapes.
+
+``input_specs(arch_id, shape_name, n_agents)`` returns the
+ShapeDtypeStruct stand-ins for every model input of the lowered step
+(the dry-run composes these with abstract params/caches — no allocation).
+
+Train inputs carry a leading agent axis [A, m_local, ...] in LT-ADMM-CC mode
+(m_local = global_batch / A is each agent's local dataset for one outer
+round); ``n_agents=None`` yields the flat all-reduce-baseline layout.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.archs import ARCHS, ArchDef, LONG_CONTEXT_WINDOW  # noqa: F401
+from repro.configs.shapes import SHAPES, InputShape  # noqa: F401
+
+SRC_FRAMES_RATIO = 4  # enc-dec: source frames = seq_len // 4 (audio stub)
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _lead(shape_tuple, batch, n_agents):
+    """Prepend agent/local-batch layout to a per-example shape."""
+    if n_agents is None:
+        return (batch,) + shape_tuple
+    assert batch % n_agents == 0, (batch, n_agents)
+    return (n_agents, batch // n_agents) + shape_tuple
+
+
+def input_specs(arch_id: str, shape_name: str, n_agents=None):
+    """Data inputs for the lowered step (params/cache handled separately)."""
+    arch = ARCHS[arch_id]
+    shape = SHAPES[shape_name]
+    cfg = arch.make(shape_name)
+    b, t = shape.global_batch, shape.seq_len
+    tok = jnp.int32
+
+    if arch.kind == "encdec":
+        s_src = t // SRC_FRAMES_RATIO
+        if shape.kind == "train":
+            return {
+                "src_embeds": _sds(
+                    _lead((s_src, cfg.d_model), b, n_agents), cfg.dtype
+                ),
+                "tgt_tokens": _sds(_lead((t + 1,), b, n_agents), tok),
+            }
+        if shape.kind == "prefill":
+            return {
+                "src_embeds": _sds((b, s_src, cfg.d_model), cfg.dtype),
+                "tgt_tokens": _sds((b, t), tok),
+            }
+        # decode: encoder memory is a precomputed input
+        return {
+            "memory": _sds((b, t // SRC_FRAMES_RATIO, cfg.d_model), cfg.dtype),
+            "token": _sds((b,), tok),
+            "pos": _sds((), tok),
+        }
+
+    if cfg.inputs_via_embeds:
+        if shape.kind == "train":
+            return {
+                "embeds": _sds(
+                    _lead((t, cfg.d_model), b, n_agents), cfg.dtype
+                ),
+                "labels": _sds(_lead((t,), b, n_agents), tok),
+            }
+        if shape.kind == "prefill":
+            return {"embeds": _sds((b, t, cfg.d_model), cfg.dtype)}
+        return {"token": _sds((b,), tok), "pos": _sds((), tok)}
+
+    if shape.kind == "train":
+        return {"tokens": _sds(_lead((t + 1,), b, n_agents), tok)}
+    if shape.kind == "prefill":
+        return {"tokens": _sds((b, t), tok)}
+    return {"token": _sds((b,), tok), "pos": _sds((), tok)}

@@ -1,0 +1,28 @@
+"""The four assigned input shapes.
+
+``train_*``   lower ``train_step`` (one LT-ADMM-CC outer round or a baseline
+              all-reduce step over the full sequence);
+``prefill_*`` lower a full-sequence forward (inference prefill);
+``decode_*``  lower ``serve_step`` — ONE new token against a KV/SSM cache of
+              ``seq_len`` (ring-buffer-windowed or recurrent where the
+              architecture requires it for 500k).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    kind: str  # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES = {
+    "train_4k": InputShape("train_4k", "train", 4_096, 256),
+    "prefill_32k": InputShape("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": InputShape("decode_32k", "decode", 32_768, 128),
+    "long_500k": InputShape("long_500k", "decode", 524_288, 1),
+}

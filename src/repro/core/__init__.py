@@ -1,0 +1,1 @@
+from repro.core import admm, baselines, compression, costmodel, reference, topology, vr  # noqa: F401

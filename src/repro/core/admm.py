@@ -1,0 +1,301 @@
+"""LT-ADMM-CC (paper Algorithm 1) on arbitrary parameter pytrees.
+
+Global-view formulation: every state tensor carries a leading **agent axis**
+``A``; per-agent math is ``vmap``-ed and the only cross-agent operations are
+the two neighbor exchanges (x-messages and z-messages) routed through
+``topology.Exchange`` — a ``collective-permute`` on the mesh agent axis in
+production, a ``jnp.roll`` in host simulation.  The same code therefore runs:
+
+* on one CPU device (paper-scale repro and tests),
+* sharded over the ``data`` axis of a 16x16 pod (agents = data slices),
+* sharded over the ``pod`` axis of a 2x16x16 multi-pod mesh (agents = pods,
+  FSDP+TP inside each pod) — the hierarchical beyond-paper mode.
+
+State indexing convention at the top of round k:
+
+    x         = x_{i,k}           x_hat     = x̂_{i,k}       u     = u_{i,k}
+    z[:,s]    = z_{i j_s,k}       s_[:,s]   = s_{i j_s,k}
+    s_tilde   = mirror of s_{j_s i,k}
+    x_hat_nbr = x̂_{j_s,k}         u_nbr     = mirror of u_{j_s,k}
+
+Round-k timeline (audited against Algorithm 1):
+  1. local phase (lines 2-8, eqs. (7)-(8)):  x_{k+1} from x_k, z_k
+  2. u_{k+1} = (1-eta) u_k + eta x̂_k                                   (6)
+  3. m_x = C(x_{k+1} - u_{k+1})   transmitted                    (line 10)
+  4. x̂_{k+1} = u_{k+1} + m_x                                          (5a)
+  5. m_z = C(z_{ij,k} - s_{ij,k}) transmitted                    (line 10)
+  6. ẑ_{ij,k} = s_{ij,k} + m_z ;  s_{ij,k+1} = ẑ_{ij,k}           (5b),(6)
+  7. receiver mirrors: u_{j,k+1}, x̂_{j,k+1}, ẑ_{ji,k}, s̃_{k+1}  (line 11)
+  8. z_{ij,k+1} = ½(ẑ_{ij,k} - ẑ_{ji,k}) + rρ x_{i,k+1}
+                  - rρ (x̂_{i,k+1} - x̂_{j,k+1})                        (4)
+
+Initialization (any common or heterogeneous x_0): u_0 = x_0, x̂_0 = x_0,
+z_0 = s_0 = s̃_0 = 0.  Message-consistent because C(0) = 0 exactly for every
+implemented compressor.
+
+With eta == 1 (the paper's experiments), u_{k+1} == x̂_k, so u/u_nbr need not
+be stored ("lean" mode — 3 fewer parameter-sized buffers per agent).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.trees import tree_lerp, tree_map, tree_sub, tree_zeros_like
+from repro.core import compression
+from repro.core.topology import Exchange, Ring
+
+
+@dataclasses.dataclass(frozen=True)
+class LTADMMConfig:
+    """Hyper-parameters of Algorithm 1 (defaults = paper §III)."""
+
+    rho: float = 0.1  # ADMM penalty
+    beta: float = 0.2  # local-training regularization weight
+    gamma: float = 0.3  # local step size
+    r: float = 1.0  # relaxation
+    eta: float = 1.0  # error-feedback EMA rate, in (0, 1]
+    tau: int = 5  # local steps between communication rounds
+    batch_size: int = 1  # |B_i|
+    compressor_x: Any = compression.Identity()
+    compressor_z: Any = compression.Identity()
+
+    @property
+    def lean(self) -> bool:
+        return self.eta == 1.0
+
+
+class LTADMMState(NamedTuple):
+    x: Any  # [A, ...]
+    x_hat: Any  # [A, ...]
+    u: Any  # [A, ...] | None (lean)
+    z: Any  # [A, S, ...]
+    s: Any  # [A, S, ...]
+    s_tilde: Any  # [A, S, ...]
+    x_hat_nbr: Any  # [A, S, ...]
+    u_nbr: Any  # [A, S, ...] | None (lean)
+    k: jax.Array
+
+
+def _stack_slots(per_slot):
+    return tree_map(lambda *xs: jnp.stack(xs, axis=1), *per_slot)
+
+
+def _slot(tree, s):
+    return tree_map(lambda x: x[:, s], tree)
+
+
+def init(cfg: LTADMMConfig, topo: Ring, exchange: Exchange, x0):
+    """x0: params with leading agent axis [A, ...]."""
+    zeros_edge = _stack_slots(
+        tuple(tree_zeros_like(x0) for _ in range(topo.n_slots))
+    )
+    x_hat_nbr = _stack_slots(exchange.gather_from_neighbors(x0))
+    return LTADMMState(
+        x=x0,
+        x_hat=x0,
+        u=None if cfg.lean else x0,
+        z=zeros_edge,
+        s=zeros_edge,
+        s_tilde=zeros_edge,
+        x_hat_nbr=x_hat_nbr,
+        u_nbr=None if cfg.lean else x_hat_nbr,
+        k=jnp.zeros((), jnp.int32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Message-key derivation — sender and receiver MUST derive identical keys
+# (this is what lets RandK keep indices off the wire entirely).
+# ---------------------------------------------------------------------------
+
+
+def _key_x(round_key, sender):
+    return jax.random.fold_in(jax.random.fold_in(round_key, 11), sender)
+
+
+def _key_z(round_key, sender, receiver):
+    k = jax.random.fold_in(round_key, 13)
+    return jax.random.fold_in(jax.random.fold_in(k, sender), receiver)
+
+
+def _key_batch(round_key, agent, t):
+    k = jax.random.fold_in(round_key, 7)
+    return jax.random.fold_in(jax.random.fold_in(k, agent), t)
+
+
+def _like_per_agent(stacked):
+    """[A, ...] tree -> per-agent ShapeDtypeStruct template."""
+    return tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype), stacked
+    )
+
+
+def local_phase(cfg: LTADMMConfig, topo: Ring, vr_est, x, z, data, round_key):
+    """Lines 2-8: tau VR-gradient steps per agent.  Returns x_{k+1} [A,...]."""
+    d_i = float(topo.degree)
+    A = jax.tree.leaves(x)[0].shape[0]
+    m = jax.tree.leaves(data)[0].shape[1]
+    z_sum = tree_map(lambda t: jnp.sum(t, axis=1), z)
+    corr = tree_map(
+        lambda xs, zs: cfg.beta * (cfg.r**2 * cfg.rho * d_i * xs - cfg.r * zs),
+        x,
+        z_sum,
+    )
+
+    def one_agent(x_i, corr_i, data_i, aid):
+        vr_state = vr_est.reset(x_i, data_i)
+
+        def body(carry, t):
+            phi, vrs = carry
+            idx = jax.random.randint(
+                _key_batch(round_key, aid, t), (cfg.batch_size,), 0, m
+            )
+            g, vrs = vr_est.estimate(vrs, phi, data_i, idx)
+            phi = tree_map(
+                lambda p, gg, c: p - cfg.gamma * gg - c, phi, g, corr_i
+            )
+            return (phi, vrs), None
+
+        (phi, _), _ = jax.lax.scan(body, (x_i, vr_state), jnp.arange(cfg.tau))
+        return phi
+
+    return jax.vmap(one_agent)(x, corr, data, jnp.arange(A))
+
+
+def step(
+    cfg: LTADMMConfig,
+    topo: Ring,
+    exchange: Exchange,
+    vr_est,
+    state: LTADMMState,
+    data,
+    round_key,
+):
+    """One outer round of Algorithm 1.  ``data`` leaves: [A, m, ...]."""
+    A = topo.n_agents
+    agent_ids = jnp.arange(A)
+    like = _like_per_agent(state.x)
+    cx, cz = cfg.compressor_x, cfg.compressor_z
+
+    # ---- 1. local training ------------------------------------------------
+    x_new = local_phase(cfg, topo, vr_est, state.x, state.z, data, round_key)
+
+    # ---- 2-4. sender-side error feedback for x ----------------------------
+    u_new = (
+        state.x_hat
+        if cfg.lean
+        else tree_lerp(state.u, state.x_hat, cfg.eta)
+    )
+
+    def compress_x(aid, delta):
+        kx = _key_x(round_key, aid)
+        p = compression.compress_tree(cx, kx, delta)
+        rec = compression.decompress_tree(cx, kx, p, like)
+        return p, rec
+
+    m_x, dx = jax.vmap(compress_x)(agent_ids, tree_sub(x_new, u_new))
+    x_hat_new = tree_map(jnp.add, u_new, dx)
+
+    # ---- 5-6. sender-side error feedback for z (per edge slot) ------------
+    nbr_ids = [
+        (agent_ids - 1) % A,  # slot 0: left neighbor
+        (agent_ids + 1) % A,  # slot 1: right neighbor
+    ]
+    m_z, z_hat_own = [], []
+    for sl in range(topo.n_slots):
+        def compress_z(aid, nid, delta):
+            kz = _key_z(round_key, aid, nid)
+            p = compression.compress_tree(cz, kz, delta)
+            rec = compression.decompress_tree(cz, kz, p, like)
+            return p, rec
+
+        delta = tree_sub(_slot(state.z, sl), _slot(state.s, sl))
+        p, rec = jax.vmap(compress_z)(agent_ids, nbr_ids[sl], delta)
+        m_z.append(p)
+        z_hat_own.append(tree_map(jnp.add, _slot(state.s, sl), rec))
+
+    # ---- the only cross-agent communication --------------------------------
+    recv_x = exchange.gather_from_neighbors(m_x)
+    recv_z = exchange.exchange_edges(tuple(m_z))
+
+    # ---- 7. receiver-side mirrors ------------------------------------------
+    u_nbr_new = (
+        state.x_hat_nbr
+        if cfg.lean
+        else tree_lerp(state.u_nbr, state.x_hat_nbr, cfg.eta)
+    )
+    x_hat_nbr_new, z_hat_nbr = [], []
+    for sl in range(topo.n_slots):
+        def decomp_x(sid, payload):
+            return compression.decompress_tree(
+                cx, _key_x(round_key, sid), payload, like
+            )
+
+        dxr = jax.vmap(decomp_x)(nbr_ids[sl], recv_x[sl])
+        x_hat_nbr_new.append(
+            tree_map(jnp.add, _slot(u_nbr_new, sl), dxr)
+        )
+
+        def decomp_z(sid, rid, payload):
+            return compression.decompress_tree(
+                cz, _key_z(round_key, sid, rid), payload, like
+            )
+
+        dzr = jax.vmap(decomp_z)(nbr_ids[sl], agent_ids, recv_z[sl])
+        z_hat_nbr.append(tree_map(jnp.add, _slot(state.s_tilde, sl), dzr))
+
+    # ---- 8. z update, eq. (4) ----------------------------------------------
+    z_new = []
+    rrho = cfg.r * cfg.rho
+    for sl in range(topo.n_slots):
+        z_new.append(
+            tree_map(
+                lambda zo, zn, xn, xh, xhj: 0.5 * (zo - zn)
+                + rrho * xn
+                - rrho * (xh - xhj),
+                z_hat_own[sl],
+                z_hat_nbr[sl],
+                x_new,
+                x_hat_new,
+                x_hat_nbr_new[sl],
+            )
+        )
+
+    return LTADMMState(
+        x=x_new,
+        x_hat=x_hat_new,
+        u=None if cfg.lean else u_new,
+        z=_stack_slots(tuple(z_new)),
+        s=_stack_slots(tuple(z_hat_own)),
+        s_tilde=_stack_slots(tuple(z_hat_nbr)),
+        x_hat_nbr=_stack_slots(tuple(x_hat_nbr_new)),
+        u_nbr=None if cfg.lean else u_nbr_new,
+        k=state.k + 1,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Diagnostics
+# ---------------------------------------------------------------------------
+
+
+def consensus_mean(state: LTADMMState):
+    return tree_map(lambda x: jnp.mean(x, axis=0), state.x)
+
+
+def consensus_error(state: LTADMMState):
+    xbar = consensus_mean(state)
+    sq = tree_map(lambda x, b: jnp.sum((x - b[None]) ** 2), state.x, xbar)
+    return sum(jax.tree.leaves(sq))
+
+
+def wire_bytes_per_round(cfg: LTADMMConfig, topo: Ring, params) -> int:
+    """Bytes each agent transmits per outer round: one x-message to every
+    neighbor + one z-message per incident edge (the paper's '2 t_c')."""
+    bx = compression.tree_wire_bytes(cfg.compressor_x, params)
+    bz = compression.tree_wire_bytes(cfg.compressor_z, params)
+    return topo.degree * (bx + bz)

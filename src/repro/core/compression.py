@@ -1,0 +1,272 @@
+"""Compression operators C : R^n -> R^n (paper §II-B, Assumption 3).
+
+A compressor here is *payload-typed*: ``compress`` returns the wire
+representation (what actually moves over ICI in a ``collective-permute``) and
+``decompress`` reconstructs the dense tensor.  This is essential for the
+roofline to be honest — if we permuted the decompressed dense tensor the HLO
+collective bytes would not shrink at all.
+
+Implemented compressors:
+
+* ``BBitQuantizer`` — the paper's C1: unbiased stochastic b-bit quantizer with
+  per-tensor inf-norm scale.  b bits per element = 1 sign bit + (b-1)
+  magnitude bits, i.e. s = 2^(b-1) - 1 levels; wire format int8 (b == 8) or
+  two 4-bit values packed per uint8 byte (b == 4).
+* ``RandK`` — the paper's C2, TPU-adapted: the index subset is derived from a
+  PRNG key shared by sender and receiver (per edge and round), so **only the
+  k values** are transmitted — no indices on the wire.  Two samplers:
+  ``uniform`` (exact rand-k, O(n log n) sort — paper-scale problems) and
+  ``block`` (uniformly-shifted cyclic block — O(k), unbiased, transformer
+  scale).
+* ``TopK`` — biased magnitude top-k (beyond-paper comparison; relies on error
+  feedback for convergence; violates Assumption 3's unbiasedness).
+* ``Identity`` — no compression (recovers LT-ADMM of ref. [14]).
+
+All compressors are unbiased with E||C(x)-x||^2 <= p ||x||^2 except TopK;
+``variance_p`` reports the constant p per leaf (used in tests and napkin
+math).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Payload = Any  # pytree of arrays — the wire representation of one leaf
+
+
+def _flat(x):
+    return jnp.reshape(x, (-1,))
+
+
+# ---------------------------------------------------------------------------
+# Leaf-level compressors
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Identity:
+    name: str = "identity"
+    unbiased: bool = True
+
+    def compress(self, key, x) -> Payload:
+        del key
+        return {"v": x}
+
+    def decompress(self, key, payload, like) -> jax.Array:
+        del key, like
+        return payload["v"]
+
+    def variance_p(self, shape) -> float:
+        del shape
+        return 1.0  # Assumption 3 constant (p >= 1; equality = lossless)
+
+    def wire_bytes(self, shape, dtype) -> int:
+        return math.prod(shape) * jnp.dtype(dtype).itemsize
+
+
+@dataclasses.dataclass(frozen=True)
+class BBitQuantizer:
+    """Paper's C1 with s = 2^(b-1) - 1 magnitude levels (b bits incl. sign).
+
+    C(x) = (||x||_inf / s) * sign(x) ∘ floor(s |x| / ||x||_inf + kappa),
+    kappa ~ U[0,1)^n  =>  E[C(x)] = x  (unbiased for any s >= 1).
+    """
+
+    bits: int = 8
+    name: str = "qbit"
+    unbiased: bool = True
+
+    def __post_init__(self):
+        assert self.bits in (4, 8), "wire packing implemented for b in {4, 8}"
+
+    @property
+    def levels(self) -> int:
+        return 2 ** (self.bits - 1) - 1
+
+    def compress(self, key, x) -> Payload:
+        xf = _flat(x).astype(jnp.float32)
+        scale = jnp.maximum(jnp.max(jnp.abs(xf)), jnp.finfo(jnp.float32).tiny)
+        kappa = jax.random.uniform(key, xf.shape)
+        q = jnp.floor(self.levels * jnp.abs(xf) / scale + kappa)
+        q = jnp.sign(xf) * q  # in [-levels-? , ...]; |q| <= levels (since |x|/scale <= 1, kappa < 1 -> floor <= levels)
+        q = q.astype(jnp.int8)
+        if self.bits == 4:
+            q = _pack4(q)
+        return {"q": q, "scale": scale}
+
+    def decompress(self, key, payload, like) -> jax.Array:
+        del key
+        q = payload["q"]
+        n = math.prod(like.shape)
+        if self.bits == 4:
+            q = _unpack4(q, n)
+        xf = payload["scale"] * q.astype(jnp.float32) / self.levels
+        return jnp.reshape(xf, like.shape).astype(like.dtype)
+
+    def variance_p(self, shape) -> float:
+        # E||C(x)-x||^2 <= (n / (4 s^2)) * (||x||_inf^2 / ||x||^2) * ||x||^2
+        # worst case ||x||_inf^2 * n / (4 s^2) <= n/(4 s^2) ||x||^2; p = 1 + n/(4 s^2)
+        n = 1
+        for d in shape:
+            n *= d
+        return 1.0 + n / (4.0 * self.levels**2)
+
+    def wire_bytes(self, shape, dtype) -> int:
+        del dtype
+        n = 1
+        for d in shape:
+            n *= d
+        return (n * self.bits + 7) // 8 + 4  # packed ints + f32 scale
+
+
+def _pack4(q_int8):
+    """Pack signed 4-bit values ([-7, 7]) two per byte (offset-8 nibbles)."""
+    q = q_int8.astype(jnp.int32) + 8  # [1, 15]
+    if q.shape[0] % 2:
+        q = jnp.concatenate([q, jnp.full((1,), 8, q.dtype)])
+    hi, lo = q[0::2], q[1::2]
+    return ((hi << 4) | lo).astype(jnp.uint8)
+
+
+def _unpack4(packed, n):
+    p = packed.astype(jnp.int32)
+    hi = (p >> 4) & 0xF
+    lo = p & 0xF
+    q = jnp.stack([hi, lo], axis=1).reshape(-1)[:n]
+    return (q - 8).astype(jnp.int8)
+
+
+@dataclasses.dataclass(frozen=True)
+class RandK:
+    """Paper's C2, seed-synchronized so indices never hit the wire.
+
+    fraction: k = max(1, round(fraction * n)) per leaf.
+    sampler:  "uniform" — exact uniform k-subset (permutation-based);
+              "block"   — cyclic contiguous block at a uniform random offset
+                          (each coordinate still has inclusion prob. k/n, so
+                          C stays unbiased; O(k) instead of O(n log n)).
+    """
+
+    fraction: float = 0.25
+    sampler: str = "uniform"
+    name: str = "randk"
+    unbiased: bool = True
+
+    def _k(self, n: int) -> int:
+        return max(1, int(round(self.fraction * n)))
+
+    def _indices(self, key, n: int):
+        k = self._k(n)
+        if self.sampler == "uniform":
+            perm = jax.random.permutation(key, n)
+            return perm[:k]
+        off = jax.random.randint(key, (), 0, n)
+        return (off + jnp.arange(k)) % n
+
+    def compress(self, key, x) -> Payload:
+        xf = _flat(x)
+        idx = self._indices(key, xf.shape[0])
+        return {"v": jnp.take(xf, idx, axis=0)}
+
+    def decompress(self, key, payload, like) -> jax.Array:
+        n = math.prod(like.shape)
+        idx = self._indices(key, n)
+        k = self._k(n)
+        out = jnp.zeros((n,), payload["v"].dtype)
+        out = out.at[idx].set((n / k) * payload["v"])
+        return jnp.reshape(out, like.shape).astype(like.dtype)
+
+    def variance_p(self, shape) -> float:
+        n = 1
+        for d in shape:
+            n *= d
+        return n / self._k(n)
+
+    def wire_bytes(self, shape, dtype) -> int:
+        n = 1
+        for d in shape:
+            n *= d
+        return self._k(n) * jnp.dtype(dtype).itemsize
+
+
+@dataclasses.dataclass(frozen=True)
+class TopK:
+    """Biased magnitude top-k (needs indices on the wire: values + int32 idx)."""
+
+    fraction: float = 0.25
+    name: str = "topk"
+    unbiased: bool = False
+
+    def _k(self, n: int) -> int:
+        return max(1, int(round(self.fraction * n)))
+
+    def compress(self, key, x) -> Payload:
+        del key
+        xf = _flat(x)
+        k = self._k(xf.shape[0])
+        v, idx = jax.lax.top_k(jnp.abs(xf), k)
+        del v
+        return {"v": jnp.take(xf, idx), "idx": idx.astype(jnp.int32)}
+
+    def decompress(self, key, payload, like) -> jax.Array:
+        del key
+        n = math.prod(like.shape)
+        out = jnp.zeros((n,), payload["v"].dtype)
+        out = out.at[payload["idx"]].set(payload["v"])
+        return jnp.reshape(out, like.shape).astype(like.dtype)
+
+    def variance_p(self, shape) -> float:
+        n = 1
+        for d in shape:
+            n *= d
+        return float(n) / self._k(n)  # loose; TopK is biased anyway
+
+    def wire_bytes(self, shape, dtype) -> int:
+        n = 1
+        for d in shape:
+            n *= d
+        return self._k(n) * (jnp.dtype(dtype).itemsize + 4)
+
+
+# ---------------------------------------------------------------------------
+# Tree-level wrappers: compress every leaf with a per-leaf folded key
+# ---------------------------------------------------------------------------
+
+
+def compress_tree(comp, key, tree) -> Payload:
+    leaves, treedef = jax.tree.flatten(tree)
+    keys = jax.random.split(key, len(leaves))
+    payloads = [comp.compress(k, x) for k, x in zip(keys, leaves)]
+    return jax.tree.unflatten(treedef, payloads)
+
+
+def decompress_tree(comp, key, payload_tree, like_tree):
+    likes, treedef = jax.tree.flatten(like_tree)
+    keys = jax.random.split(key, len(likes))
+    # payload_tree has dict nodes at leaf positions of like_tree
+    payloads = treedef.flatten_up_to(payload_tree)
+    outs = [
+        comp.decompress(k, p, jax.ShapeDtypeStruct(x.shape, x.dtype))
+        for k, p, x in zip(keys, payloads, likes)
+    ]
+    return jax.tree.unflatten(treedef, outs)
+
+
+def tree_wire_bytes(comp, tree) -> int:
+    return sum(
+        comp.wire_bytes(x.shape, x.dtype) for x in jax.tree.leaves(tree)
+    )
+
+
+def get_compressor(name: str, **kw):
+    table = {
+        "identity": Identity,
+        "qbit": BBitQuantizer,
+        "randk": RandK,
+        "topk": TopK,
+    }
+    return table[name](**kw)

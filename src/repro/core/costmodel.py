@@ -1,0 +1,51 @@
+"""Time-cost accounting (paper Table I).
+
+The paper assigns cost t_g per component-gradient evaluation and t_c per
+communication round, and reports the cost of tau iterations of each method.
+``round_cost`` returns the cost of ONE outer round in (t_g, t_c) units; for
+the single-loop baselines an "outer round" is one iteration, so Fig.-2-style
+comparisons advance baselines tau iterations per LT-ADMM-CC round.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class CostModel:
+    t_g: float = 1.0
+    t_c: float = 10.0  # paper Fig. 2 regime: t_c = 10 t_g
+
+    def lt_admm_cc(self, m: int, tau: int) -> float:
+        """(m + tau - 1) t_g + 2 t_c  — Table I last row.
+
+        Full gradient (m evals) at the phase start to reset the SAGA table,
+        then tau - 1 single-component evals; 2 communication rounds (the
+        x-message and the z-message).
+        """
+        return (m + tau - 1) * self.t_g + 2 * self.t_c
+
+    def lead(self, tau: int) -> float:
+        return tau * (self.t_g + self.t_c)
+
+    def cedas(self, tau: int) -> float:
+        return tau * (self.t_g + 2 * self.t_c)
+
+    def cold_dpdc_sgd(self, tau: int) -> float:
+        return tau * (self.t_g + self.t_c)
+
+    def cold_dpdc_full(self, tau: int, m: int) -> float:
+        return tau * (m * self.t_g + self.t_c)
+
+    def dsgd(self, tau: int) -> float:
+        return tau * (self.t_g + self.t_c)
+
+    def per_iteration(self, algo: str, m: int, full_grad: bool = False):
+        """Cost of ONE iteration of a single-loop baseline."""
+        if algo in ("lead", "dsgd", "choco"):
+            return self.t_g + self.t_c
+        if algo == "cedas":
+            return self.t_g + 2 * self.t_c
+        if algo in ("cold", "dpdc"):
+            return (m if full_grad else 1) * self.t_g + self.t_c
+        raise ValueError(algo)

@@ -1,0 +1,135 @@
+"""Agent graph topologies and the neighbor-exchange primitive.
+
+LT-ADMM-CC runs over an undirected agent graph G = (V, E).  On TPU we map the
+agent set onto one mesh axis (``agents="data"`` fine-grained mode, or
+``agents="pod"`` hierarchical mode — see DESIGN.md §3) and use a **ring**,
+which embeds natively into an ICI torus axis so every neighbor exchange is a
+single-hop ``collective-permute``.
+
+All algorithm state carries a leading agent axis ``A``.  Edge state carries
+``[A, S, ...]`` where ``S`` is the number of neighbor slots (2 for a ring:
+slot 0 = left/(i-1) edge, slot 1 = right/(i+1) edge).
+
+The exchange primitive has two implementations with identical semantics:
+
+* ``roll``     — pure ``jnp.roll`` on the leading axis.  Used for host
+                 simulation/tests; also lowers to collective-permutes when the
+                 axis is sharded, but less cleanly (2 CPs).
+* ``ppermute`` — ``jax.shard_map`` over the agent mesh axis with
+                 ``lax.ppermute``; every other mesh axis is left to the
+                 compiler (auto).  One CP per direction — this is the wire
+                 traffic the roofline counts.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class Ring:
+    """Undirected ring of ``n_agents`` agents.
+
+    Degree d_i = 2 for every agent (n_agents >= 3), or 1 for n_agents == 2.
+    """
+
+    n_agents: int
+
+    @property
+    def n_slots(self) -> int:
+        return 2
+
+    @property
+    def degree(self) -> int:
+        # Ring with 2 agents degenerates to a single edge.
+        return 2 if self.n_agents > 2 else 1
+
+    def neighbor_ids(self, agent_id):
+        """Neighbor agent id per slot, for a (possibly traced) agent id."""
+        n = self.n_agents
+        return ((agent_id - 1) % n, (agent_id + 1) % n)
+
+    # Which slot of the *neighbor* points back at me, per my slot.
+    # My left neighbor's right slot (1) is the edge (j -> i); vice versa.
+    reverse_slot = (1, 0)
+
+    def slot_shifts(self):
+        """roll shift that brings slot-s messages *from* the sender to me.
+
+        recv[i] = sent[(i - shift) % A]; receiving from left neighbor (i-1)
+        needs shift +1, from right neighbor (i+1) needs shift -1.
+        """
+        return (1, -1)
+
+
+def _roll_tree(tree, shift):
+    return jax.tree.map(lambda x: jnp.roll(x, shift, axis=0), tree)
+
+
+def _ppermute_tree(tree, axis_name, perm):
+    return jax.tree.map(
+        lambda x: jax.lax.ppermute(x, axis_name, perm), tree
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class Exchange:
+    """Neighbor exchange over a ring, optionally bound to a mesh axis.
+
+    ``axis``: mesh axis name the agent dim is sharded over, or None for the
+    pure-jnp roll implementation (host simulation / tiny tests).
+    """
+
+    topo: Ring
+    axis: str | None = None
+    mesh: Any = None  # jax.sharding.Mesh when axis is not None
+
+    def gather_from_neighbors(self, per_agent_tree):
+        """Every agent broadcasts one message; returns tuple over slots of
+        the received messages, each with leading dim A.
+
+        Slot s of the result holds the message sent by my slot-s neighbor.
+        """
+        out = []
+        for shift in self.topo.slot_shifts():
+            out.append(self._shift(per_agent_tree, shift))
+        return tuple(out)
+
+    def exchange_edges(self, per_slot_trees):
+        """Edge-directed exchange: ``per_slot_trees[s]`` is what each agent
+        sends to its slot-s neighbor.  Returns per-slot received messages:
+        result[s] = message my slot-s neighbor sent on its reverse slot.
+        """
+        out = []
+        for s, shift in enumerate(self.topo.slot_shifts()):
+            rs = self.topo.reverse_slot[s]
+            out.append(self._shift(per_slot_trees[rs], shift))
+        return tuple(out)
+
+    def _shift(self, tree, shift):
+        if self.axis is None:
+            return _roll_tree(tree, shift)
+        n = self.topo.n_agents
+        # recv[i] = sent[(i - shift) % n]  ==  ppermute src->dst (j -> j+shift)
+        perm = [(j, (j + shift) % n) for j in range(n)]
+        fn = partial(_ppermute_tree, axis_name=self.axis, perm=perm)
+        shmap = jax.shard_map(
+            fn,
+            mesh=self.mesh,
+            in_specs=P(self.axis),
+            out_specs=P(self.axis),
+            axis_names={self.axis},
+        )
+        return shmap(tree)
+
+
+def metropolis_ring_weights(n_agents: int):
+    """Mixing weights for DSGD-style baselines on a ring (self, left, right)."""
+    if n_agents == 2:
+        return (0.5, 0.5, 0.0)
+    return (1.0 / 3.0, 1.0 / 3.0, 1.0 / 3.0)

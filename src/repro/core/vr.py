@@ -1,0 +1,130 @@
+"""Variance-reduced stochastic gradient estimators (paper §II-B(c), eq. (8)).
+
+The paper uses a SAGA-style table estimator, reset at the start of every
+local-training phase.  Two implementations:
+
+* ``SagaTable`` — faithful: a table of per-datapoint gradients
+  {∇f_{i,h}(r_{i,h})}, reset to the full gradient at the phase start.
+  Memory O(m_i × |params|): right for the paper-scale convex problems.
+* ``SvrgAnchor`` — transformer-scale adaptation (DESIGN.md §3): keeps only the
+  phase-start anchor point and its full/large-batch gradient; the estimator is
+  g = ∇f_B(φ) − ∇f_B(anchor) + ∇f(anchor).  Same control-variate structure
+  and the same reset point as the paper's table, O(1) × |params| memory.
+
+Both estimators are unbiased conditioned on the phase-start point:
+E[g(φ)] = ∇f_i(φ).  ``FullGrad`` recovers deterministic local training.
+
+API (pure functions, vmappable over the agent axis):
+    state = est.reset(params, data)
+    g, state = est.estimate(state, phi, data, idx)   # idx: minibatch indices
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Any
+
+import jax
+import jax.numpy as jnp
+
+
+class SagaState(NamedTuple):
+    table: Any  # pytree, leaves [m, ...param-shape]
+    mean: Any  # pytree, running mean of the table
+
+
+class SvrgState(NamedTuple):
+    anchor: Any
+    anchor_grad: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class SagaTable:
+    """Paper-faithful SAGA table over a dataset of m samples.
+
+    ``sample_grad(params, sample) -> grad``; data leaves have leading dim m.
+    """
+
+    sample_grad: Callable
+    m: int
+
+    def reset(self, params, data) -> SagaState:
+        grads = jax.vmap(lambda s: self.sample_grad(params, s))(data)
+        mean = jax.tree.map(lambda t: jnp.mean(t, axis=0), grads)
+        return SagaState(table=grads, mean=mean)
+
+    def estimate(self, state: SagaState, phi, data, idx):
+        batch = jax.tree.map(lambda x: x[idx], data)
+        new_g = jax.vmap(lambda s: self.sample_grad(phi, s))(batch)
+        old_g = jax.tree.map(lambda t: t[idx], state.table)
+        # g = mean_B(new - old) + table mean                     (eq. (8))
+        g = jax.tree.map(
+            lambda n, o, m: jnp.mean(n - o, axis=0) + m,
+            new_g,
+            old_g,
+            state.mean,
+        )
+        # refresh table rows h in B and the running mean
+        table = jax.tree.map(
+            lambda t, n: t.at[idx].set(n), state.table, new_g
+        )
+        mean = jax.tree.map(
+            lambda m_, n, o: m_ + jnp.sum(n - o, axis=0) / self.m,
+            state.mean,
+            new_g,
+            old_g,
+        )
+        return g, SagaState(table=table, mean=mean)
+
+
+@dataclasses.dataclass(frozen=True)
+class SvrgAnchor:
+    """Anchor (loopless-SVRG style) estimator for large models.
+
+    ``batch_grad(params, batch) -> grad`` (mean over the batch);
+    ``full_grad(params, data) -> grad`` (mean over the agent's local data or
+    a fixed large anchor batch).
+    """
+
+    batch_grad: Callable
+    full_grad: Callable
+
+    def reset(self, params, data) -> SvrgState:
+        return SvrgState(anchor=params, anchor_grad=self.full_grad(params, data))
+
+    def estimate(self, state: SvrgState, phi, data, idx):
+        batch = jax.tree.map(lambda x: x[idx], data)
+        g_phi = self.batch_grad(phi, batch)
+        g_anc = self.batch_grad(state.anchor, batch)
+        g = jax.tree.map(
+            lambda a, b, c: a - b + c, g_phi, g_anc, state.anchor_grad
+        )
+        return g, state
+
+
+@dataclasses.dataclass(frozen=True)
+class FullGrad:
+    """Deterministic full local gradient (no VR, no stochasticity)."""
+
+    full_grad: Callable
+
+    def reset(self, params, data):
+        return ()
+
+    def estimate(self, state, phi, data, idx):
+        del idx
+        return self.full_grad(phi, data), state
+
+
+@dataclasses.dataclass(frozen=True)
+class PlainSgd:
+    """Plain minibatch SGD gradient (no variance reduction) — used by the
+    baseline algorithms that the paper shows converge only to a noise ball."""
+
+    batch_grad: Callable
+
+    def reset(self, params, data):
+        return ()
+
+    def estimate(self, state, phi, data, idx):
+        batch = jax.tree.map(lambda x: x[idx], data)
+        return self.batch_grad(phi, batch), state

@@ -1,0 +1,30 @@
+"""Dense pure-jnp oracle for the flash attention kernel."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal=True, window=None):
+    """q [B,H,T,Dh]; k,v [B,KH,S,Dh] -> [B,H,T,Dh] (GQA broadcast)."""
+    b, h, t, dh = q.shape
+    kh, s = k.shape[1], k.shape[2]
+    g = h // kh
+    k = jnp.repeat(k, g, axis=1)
+    v = jnp.repeat(v, g, axis=1)
+    scores = jnp.einsum("bhtd,bhsd->bhts", q, k).astype(jnp.float32)
+    scores = scores / math.sqrt(dh)
+    rows = jnp.arange(t)[:, None]
+    cols = jnp.arange(s)[None, :]
+    mask = jnp.ones((t, s), bool)
+    if causal:
+        mask &= rows >= cols
+    if window is not None:
+        mask &= (rows - cols) < window
+    scores = jnp.where(mask[None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhts,bhsd->bhtd", probs, v.astype(jnp.float32)).astype(
+        q.dtype
+    )

@@ -1,0 +1,44 @@
+"""Jitted public wrapper: quantize/dequantize arbitrary-shape tensors.
+
+Handles padding to the kernel BLOCK, the inf-norm scale pass, and the
+PRNG-bit stream; exposes the same (compress, decompress) contract as
+``repro.core.compression.BBitQuantizer`` so the trainer can swap the Pallas
+path in with ``use_kernel=True``.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.quantize.kernel import BLOCK, dequantize, quantize
+
+
+def _pad_to_block(x_flat):
+    n = x_flat.shape[0]
+    pad = (-n) % BLOCK
+    if pad:
+        x_flat = jnp.concatenate([x_flat, jnp.zeros((pad,), x_flat.dtype)])
+    return x_flat, n
+
+
+def quantize_tensor(key, x, *, bits=8, interpret=True):
+    """Returns payload {"q", "scale"} with kernel-quantized wire data."""
+    flat = jnp.reshape(x, (-1,)).astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(flat)), jnp.finfo(jnp.float32).tiny)
+    padded, n = _pad_to_block(flat)
+    rnd = jax.random.bits(key, (padded.shape[0],), jnp.uint32)
+    q = quantize(padded, rnd, scale, bits=bits, interpret=interpret)
+    return {"q": q, "scale": scale, "n": n}
+
+
+def dequantize_tensor(payload, shape, dtype=jnp.float32, *, bits=8,
+                      interpret=True):
+    n = math.prod(shape)
+    n_padded = payload["q"].shape[0] * (1 if bits == 8 else 2)
+    x = dequantize(
+        payload["q"], payload["scale"], bits=bits, n=n_padded,
+        out_dtype=dtype, interpret=interpret,
+    )
+    return jnp.reshape(x[:n], shape)

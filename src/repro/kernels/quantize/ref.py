@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the quantize kernels (bit-identical semantics)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def quantize_ref(x_flat, rnd_bits, scale, *, bits=8):
+    levels = float(2 ** (bits - 1) - 1)
+    kappa = rnd_bits.astype(jnp.float32) * (1.0 / 4294967296.0)
+    x = x_flat.astype(jnp.float32)
+    q = jnp.sign(x) * jnp.floor(levels * jnp.abs(x) / scale + kappa)
+    if bits == 8:
+        return q.astype(jnp.int8)
+    qi = q.astype(jnp.int32) + 8
+    hi, lo = qi[0::2], qi[1::2]
+    return ((hi << 4) | lo).astype(jnp.uint8)
+
+
+def dequantize_ref(q, scale, *, bits=8, n=None, out_dtype=jnp.float32):
+    levels = float(2 ** (bits - 1) - 1)
+    if bits == 8:
+        qf = q.astype(jnp.float32)
+    else:
+        p = q.astype(jnp.int32)
+        hi = ((p >> 4) & 0xF) - 8
+        lo = (p & 0xF) - 8
+        qf = jnp.stack([hi, lo], axis=1).reshape(-1).astype(jnp.float32)
+        if n is not None:
+            qf = qf[:n]
+    return (scale * qf / levels).astype(out_dtype)

@@ -1,0 +1,33 @@
+"""Naive per-timestep recurrence oracle for the SSD scan kernel.
+
+h_t = exp(alog_t) * h_{t-1} + B_t ⊗ x_t ;   y_t = C_t · h_t
+(x is dt-prescaled, alog = dt * A, exactly as the kernel expects).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_scan_ref(x, alog, bmat, cmat):
+    """x [B,NH,T,HD]; alog [B,NH,T]; bmat/cmat [B,NH,T,DS]."""
+    b, nh, t, hd = x.shape
+    ds = bmat.shape[-1]
+
+    def step(h, inp):
+        x_t, a_t, b_t, c_t = inp  # [B,NH,HD], [B,NH], [B,NH,DS], [B,NH,DS]
+        h = jnp.exp(a_t)[..., None, None] * h + jnp.einsum(
+            "bhs,bhd->bhsd", b_t, x_t
+        )
+        y = jnp.einsum("bhs,bhsd->bhd", c_t, h)
+        return h, y
+
+    h0 = jnp.zeros((b, nh, ds, hd), jnp.float32)
+    xs = (
+        jnp.moveaxis(x, 2, 0).astype(jnp.float32),
+        jnp.moveaxis(alog, 2, 0).astype(jnp.float32),
+        jnp.moveaxis(bmat, 2, 0).astype(jnp.float32),
+        jnp.moveaxis(cmat, 2, 0).astype(jnp.float32),
+    )
+    h_final, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 2).astype(x.dtype), h_final

@@ -1,0 +1,56 @@
+# Perf-iteration driver: re-lowers one (arch x shape) with a variant stack
+# and prints the roofline-term deltas.  Same 512-device world as the dry-run.
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+
+from repro.launch.dryrun import dryrun_one  # noqa: E402
+
+"""Usage:
+    python -m repro.launch.hillclimb --arch command-r-plus-104b \
+        --shape train_4k --variant '{"xent_chunks": 8}' --out results/hc.jsonl
+"""
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--variant", default="{}",
+                    help="JSON: xent_chunks/serve_mode/remat/recipe_*")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+
+    variant = json.loads(args.variant)
+    rec = dryrun_one(args.arch, args.shape, args.multi_pod,
+                     variant=variant, verbose=False)
+    rec["tag"] = args.tag
+    summary = {
+        "tag": args.tag,
+        "variant": variant,
+        "t_compute_s": rec["roofline"]["t_compute_s"],
+        "t_memory_s": rec["roofline"]["t_memory_s"],
+        "t_collective_s": rec["roofline"]["t_collective_s"],
+        "dominant": rec["roofline"]["dominant"],
+        "mem_v1_bytes": rec["hlo"]["memory_bytes"],
+        "mem_v2_bytes": rec["hlo"].get("memory_bytes_w2"),
+        "coll_bytes": rec["hlo"]["collective_bytes"],
+        "dot_flops": rec["hlo"]["dot_flops"],
+        "live_GB_per_dev": rec["bytes_per_device"]["total_live"] / 1e9,
+        "temp_GB_per_dev": rec["bytes_per_device"]["temp"] / 1e9,
+        "useful": rec["useful_fraction"],
+        "compile_s": rec["compile_s"],
+    }
+    print(json.dumps(summary, indent=1, default=str))
+    if args.out:
+        with open(args.out, "a") as f:
+            f.write(json.dumps(rec, default=str) + "\n")
+
+
+if __name__ == "__main__":
+    main()

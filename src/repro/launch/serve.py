@@ -1,0 +1,81 @@
+"""Serving driver: batched greedy decoding against the KV/SSM cache.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --smoke \
+        --batch 4 --prompt-len 8 --gen 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS
+from repro.launch.steps import model_specs
+from repro.models import encdec, transformer as tr
+from repro.models.common import init_params
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-0.6b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=8)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    arch = ARCHS[args.arch]
+    cfg = arch.make_smoke() if args.smoke else arch.make(None)
+    key = jax.random.key(args.seed)
+    params = init_params(key, model_specs(arch, cfg))
+    b = args.batch
+    max_len = args.prompt_len + args.gen
+
+    if arch.kind == "encdec":
+        src = jax.random.normal(key, (b, args.prompt_len, cfg.d_model))
+        memory = encdec.encode(params, cfg, src)
+        cache = encdec.init_cache(params, cfg, memory, max_len)
+        step = jax.jit(
+            lambda p, c, t, pos: encdec.decode_step(p, cfg, c, t, pos)
+        )
+        tokens = jnp.zeros((b,), jnp.int32)
+        generated = []
+        t0 = time.time()
+        for pos in range(args.gen):
+            logits, cache = step(params, cache, tokens, jnp.int32(pos))
+            tokens = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)
+            generated.append(tokens)
+    else:
+        prompt = jax.random.randint(
+            key, (b, args.prompt_len), 0, cfg.vocab
+        ).astype(jnp.int32)
+        cache = tr.init_cache(cfg, b, max_len)
+        step = jax.jit(
+            lambda p, c, t, pos: tr.decode_step(p, cfg, c, token=t, pos=pos)
+        )
+        # prefill via the decode path (token-by-token; a fused prefill is
+        # exercised by the dry-run's prefill_32k shape)
+        tokens = prompt[:, 0]
+        t0 = time.time()
+        for pos in range(args.prompt_len - 1):
+            _, cache = step(params, cache, prompt[:, pos], jnp.int32(pos))
+        tokens = prompt[:, -1]
+        generated = []
+        for pos in range(args.prompt_len - 1, args.prompt_len - 1 + args.gen):
+            logits, cache = step(params, cache, tokens, jnp.int32(pos))
+            tokens = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)
+            generated.append(tokens)
+
+    out = jnp.stack(generated, axis=1)
+    dt = time.time() - t0
+    print(f"# generated {out.shape} in {dt:.2f}s "
+          f"({b * args.gen / dt:.1f} tok/s incl. compile)")
+    for row in out[: min(b, 4)]:
+        print("tokens:", " ".join(str(int(t)) for t in row))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,190 @@
+"""Sharding rules: logical parameter axes -> mesh axes, per execution mode.
+
+Modes
+-----
+admm  (train): LT-ADMM-CC.  The agent ring lives on ``agent_axis``
+      ("data" on a single pod — 16 agents × 16-chip TP; "pod" on the
+      multi-pod mesh — 2 pod-agents, each FSDP+TP over 16×16 chips).
+serve (prefill/decode): no agent axis; batch over the data-like axes,
+      tensor parallel over "model"; long-context caches fall back to
+      sequence sharding when the batch does not divide.
+
+Every spec is sanitized against the concrete shape: a mesh axis is dropped
+from a dim that it does not divide (e.g. kv_heads=8 on a 16-way model axis),
+so every architecture lowers on every mesh without per-arch rules.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models.common import ParamSpec, is_spec
+
+
+def _axis_size(mesh, name):
+    if name is None:
+        return 1
+    if isinstance(name, tuple):
+        return math.prod(_axis_size(mesh, n) for n in name)
+    return mesh.shape[name]
+
+
+def sanitize_spec(mesh, shape, spec: P) -> P:
+    """Drop mesh axes that do not divide the corresponding dim, and
+    de-duplicate axes that appear on several dims (first dim wins — e.g. MoE
+    expert weights [E, d, ff] map both "experts" and "ffn" to 'model'; the
+    expert dim keeps it)."""
+    out = []
+    used = set()
+    for i, name in enumerate(spec):
+        if name is None or i >= len(shape):
+            out.append(None)
+            continue
+        if isinstance(name, tuple):
+            # keep the longest prefix of the tuple that divides & is unused
+            kept = []
+            size = 1
+            for n in name:
+                if n in used:
+                    continue
+                if shape[i] % (size * _axis_size(mesh, n)) == 0:
+                    kept.append(n)
+                    size *= _axis_size(mesh, n)
+            used.update(kept)
+            out.append(tuple(kept) if kept else None)
+        else:
+            ok = (
+                name not in used
+                and shape[i] % _axis_size(mesh, name) == 0
+            )
+            if ok:
+                used.add(name)
+            out.append(name if ok else None)
+    while len(out) < len(shape):
+        out.append(None)
+    return P(*out)
+
+
+def param_rules(mesh, mode: str) -> dict:
+    """logical axis name -> mesh axis (pre-sanitization).
+
+    mode "serve_replicated": tensor-parallel only, weights replicated over
+    the data axes — for decode of models that fit per-chip, this removes the
+    per-token FSDP weight all-gathers (§Perf).
+    """
+    multi_pod = "pod" in mesh.axis_names
+    if mode == "serve_replicated":
+        fsdp = ()
+    else:
+        fsdp = ("data",) if (mode == "serve" or multi_pod) else ()
+    # "embed" carries FSDP (it appears in every matmul's non-TP dim);
+    # heads/ffn/experts/vocab carry tensor parallelism.
+    rules = {
+        "embed": fsdp[0] if fsdp else None,
+        "heads": "model",
+        "kv_heads": "model",
+        "head": None,
+        "ffn": "model",
+        "experts": "model",
+        "vocab": "model",
+        "ssm_inner": "model",
+        "layers": None,
+        None: None,
+    }
+    return rules
+
+
+def param_pspec(mesh, mode: str, spec_tree):
+    """PartitionSpec tree for (per-agent) model parameters."""
+    rules = param_rules(mesh, mode)
+
+    def one(s: ParamSpec):
+        base = [rules.get(a) for a in s.axes]
+        return sanitize_spec(mesh, s.shape, P(*base))
+
+    return jax.tree.map(one, spec_tree, is_leaf=is_spec)
+
+
+def prefix_pspec(pspec_tree, *prefix):
+    """Prepend mesh axes (e.g. the agent axis) to every PartitionSpec."""
+    return jax.tree.map(
+        lambda sp: P(*prefix, *sp),
+        pspec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def shard_like(mesh, pspec_tree):
+    return jax.tree.map(
+        lambda sp: NamedSharding(mesh, sp), pspec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Activation / data shardings
+# ---------------------------------------------------------------------------
+
+
+def train_data_pspec(mesh, leaves_ndim: dict):
+    """ADMM train data [A, m, ...]: A on the agent axis; m on 'data' when the
+    agent axis is 'pod' (hierarchical mode)."""
+    from repro.launch.mesh import agent_axis_for
+
+    aaxis = agent_axis_for(mesh)
+    inner = "data" if aaxis == "pod" else None
+
+    def one(ndim):
+        spec = [aaxis, inner] + [None] * (ndim - 2)
+        return P(*spec)
+
+    return {k: one(v) for k, v in leaves_ndim.items()}
+
+
+def batch_pspec(mesh, shape):
+    """Serve-mode batched tensor: batch dim -> all data-like axes that
+    divide; sequence dim (axis 1, if present) picks up 'data' when the batch
+    cannot use it (long-context single-request decode)."""
+    data_axes = [a for a in mesh.axis_names if a != "model"]
+    batch_axes = []
+    size = 1
+    for a in data_axes:
+        if shape[0] % (size * mesh.shape[a]) == 0:
+            batch_axes.append(a)
+            size *= mesh.shape[a]
+    spec = [tuple(batch_axes) if batch_axes else None]
+    leftover = [a for a in data_axes if a not in batch_axes]
+    if len(shape) > 2 and leftover:
+        # shard the sequence dim with whatever data axes remain
+        kept = []
+        size = 1
+        for a in leftover:
+            if shape[1] % (size * mesh.shape[a]) == 0:
+                kept.append(a)
+                size *= mesh.shape[a]
+        spec.append(tuple(kept) if kept else None)
+    while len(spec) < len(shape):
+        spec.append(None)
+    return sanitize_spec(mesh, shape, P(*spec))
+
+
+def cache_pspec(mesh, cache_tree):
+    """Decode caches: [B, S, KH, Dh] / [B, S, r] / SSM states [B, ...]."""
+
+    def one(x):
+        shape = x.shape
+        if len(shape) >= 2:
+            base = batch_pspec(mesh, shape)
+            # try to add model-parallelism on the heads dim (axis 2) of KV
+            if len(shape) == 4:
+                lst = list(base) + [None] * (4 - len(base))
+                if lst[2] is None:
+                    lst[2] = "model"
+                return sanitize_spec(mesh, shape, P(*lst))
+            return base
+        return P(*([None] * len(shape)))
+
+    return jax.tree.map(one, cache_tree)

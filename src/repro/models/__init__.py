@@ -1,0 +1,9 @@
+from repro.models import (  # noqa: F401
+    attention,
+    common,
+    encdec,
+    mamba,
+    moe,
+    transformer,
+    xlstm,
+)

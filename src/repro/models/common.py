@@ -1,0 +1,229 @@
+"""Shared model-building blocks: parameter specs, norms, RoPE, embeddings.
+
+The model zoo is a minimal functional module system (plain dict pytrees, no
+flax):  every layer defines a ``*_specs(cfg)`` function returning a tree of
+``ParamSpec`` (shape + logical axis names + initializer), from which
+``init_params`` materializes weights and ``partition_specs`` derives
+``PartitionSpec``s through the mesh rules in ``repro.launch.sharding``.
+Keeping shapes and logical axes in one place is what makes every architecture
+shardable on every mesh without per-model sharding code.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple
+    axes: tuple  # logical axis name per dim (None = replicated dim)
+    init: str = "normal"  # normal | zeros | ones | embed
+    scale: float = 1.0  # multiplier on the default fan-in scale
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_spec(x):
+    return isinstance(x, ParamSpec)
+
+
+def init_params(key, spec_tree, dtype=jnp.float32):
+    specs, treedef = jax.tree.flatten(spec_tree, is_leaf=is_spec)
+    keys = jax.random.split(key, len(specs))
+
+    def one(k, s: ParamSpec):
+        if s.init == "zeros":
+            return jnp.zeros(s.shape, dtype)
+        if s.init == "ones":
+            return jnp.ones(s.shape, dtype)
+        if s.init == "embed":
+            return (jax.random.normal(k, s.shape) * s.scale).astype(dtype)
+        # fan-in scaled normal; the leading "layers" stack axis is a batch
+        # of independent layers, NOT a fan-in dimension
+        dims = [d for d, a in zip(s.shape, s.axes) if a != "layers"]
+        fan_in = dims[0] if len(dims) > 1 else (dims[-1] if dims else 1)
+        std = s.scale / math.sqrt(max(fan_in, 1))
+        return (jax.random.normal(k, s.shape) * std).astype(dtype)
+
+    return jax.tree.unflatten(treedef, [one(k, s) for k, s in zip(keys, specs)])
+
+
+def abstract_params(spec_tree, dtype=jnp.float32):
+    """ShapeDtypeStruct tree — used by the dry-run (no allocation)."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, dtype),
+        spec_tree,
+        is_leaf=is_spec,
+    )
+
+
+def partition_specs(spec_tree, rules: dict):
+    """Map logical axis names -> mesh axes through ``rules``.
+
+    rules: {logical_name: mesh_axis | tuple | None}
+    """
+    from jax.sharding import PartitionSpec as P
+
+    def one(s: ParamSpec):
+        return P(*[rules.get(a) for a in s.axes])
+
+    return jax.tree.map(one, spec_tree, is_leaf=is_spec)
+
+
+def param_count(spec_tree) -> int:
+    return sum(
+        math.prod(s.shape)
+        for s in jax.tree.leaves(spec_tree, is_leaf=is_spec)
+    )
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_specs(d):
+    return {"scale": ParamSpec((d,), ("embed",), init="ones")}
+
+
+def rmsnorm(params, x, eps=1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"]).astype(x.dtype)
+
+
+def nonparam_layernorm(x, eps=1e-5):
+    """OLMo-style non-parametric LayerNorm (no learnable scale/bias)."""
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps)).astype(x.dtype)
+
+
+def make_norm(kind: str, d):
+    """Returns (specs, apply(params, x))."""
+    if kind == "rms":
+        return rmsnorm_specs(d), rmsnorm
+    if kind == "nonparam_ln":
+        return {}, lambda p, x: nonparam_layernorm(x)
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(dim: int, theta: float = 10000.0):
+    return 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+
+
+def apply_rope(x, positions, theta=10000.0):
+    """x: [..., T, H, Dh]; positions: [..., T] (broadcastable)."""
+    dh = x.shape[-1]
+    freqs = rope_frequencies(dh, theta)  # [Dh/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., T, Dh/2]
+    cos = jnp.cos(angles)[..., None, :]  # [..., T, 1, Dh/2]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+
+def embedding_specs(vocab, d):
+    return {"embedding": ParamSpec((vocab, d), ("vocab", "embed"),
+                                   init="embed", scale=0.02)}
+
+
+def embed(params, tokens):
+    return jnp.take(params["embedding"], tokens, axis=0)
+
+
+def unembed(params, x):
+    return jnp.einsum("...d,vd->...v", x, params["embedding"])
+
+
+def unembed_head_specs(vocab, d):
+    return {"w": ParamSpec((d, vocab), ("embed", "vocab"))}
+
+
+def unembed_head(params, x):
+    return jnp.einsum("...d,dv->...v", x, params["w"])
+
+
+# ---------------------------------------------------------------------------
+# Losses
+# ---------------------------------------------------------------------------
+
+
+def softmax_xent_streamed(x, embedding, labels, n_chunks=8):
+    """Fused unembed + cross-entropy, streamed over vocab chunks.
+
+    Never materializes the [B, T, V] logits tensor (the single largest
+    activation of large-vocab training): scans over V/n_chunks slices of the
+    tied embedding, carrying the running (max, sumexp, gold-logit) of an
+    online logsumexp.  Wrapped in jax.checkpoint so the backward pass
+    recomputes chunk logits instead of storing them.
+
+    x [B, T, d] final hidden states; embedding [V, d]; labels [B, T].
+    """
+    v, d = embedding.shape
+    assert v % n_chunks == 0, (v, n_chunks)
+    vc = v // n_chunks
+    xf = x.astype(jnp.float32)
+    emb = embedding.reshape(n_chunks, vc, d)
+
+    @jax.checkpoint
+    def body(carry, inp):
+        m, s, gold = carry
+        chunk, off = inp
+        logits_c = jnp.einsum(
+            "btd,vd->btv", xf, chunk.astype(jnp.float32)
+        )
+        m_new = jnp.maximum(m, jnp.max(logits_c, axis=-1))
+        s = s * jnp.exp(m - m_new) + jnp.sum(
+            jnp.exp(logits_c - m_new[..., None]), axis=-1
+        )
+        local = labels - off
+        in_chunk = (local >= 0) & (local < vc)
+        picked = jnp.take_along_axis(
+            logits_c, jnp.clip(local, 0, vc - 1)[..., None], axis=-1
+        )[..., 0]
+        gold = jnp.where(in_chunk, picked, gold)
+        return (m_new, s, gold), None
+
+    b, t = labels.shape
+    init = (
+        jnp.full((b, t), -jnp.inf, jnp.float32),
+        jnp.zeros((b, t), jnp.float32),
+        jnp.zeros((b, t), jnp.float32),
+    )
+    offs = jnp.arange(n_chunks) * vc
+    (m, s, gold), _ = jax.lax.scan(body, init, (emb, offs))
+    nll = m + jnp.log(s) - gold
+    return jnp.mean(nll)
+
+
+def softmax_xent(logits, labels, mask=None):
+    """Mean next-token cross entropy.  logits [..., V]; labels [...] int."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(
+        logits, labels[..., None], axis=-1
+    ).squeeze(-1)
+    nll = logz - gold
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

@@ -1,0 +1,232 @@
+"""Mamba2 (SSD — state-space duality) block, chunked-scan formulation.
+
+Training/prefill uses the chunked algorithm: within a chunk the output is an
+attention-like masked product (MXU-friendly); across chunks a small recurrent
+state h [B, heads, head_dim, d_state] is carried by ``lax.scan``.  Decode is
+the O(1) recurrent update.  The chunk kernel has a Pallas implementation in
+``repro.kernels.ssm_scan`` (selected with ``use_kernel``); this file is the
+pure-jnp reference used everywhere else.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParamSpec, rmsnorm
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_model: int
+    d_state: int = 64
+    d_conv: int = 4
+    expand: int = 2
+    head_dim: int = 64
+    n_groups: int = 1
+    chunk: int = 128
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_inner // self.head_dim
+
+    @property
+    def conv_dim(self) -> int:
+        return self.d_inner + 2 * self.n_groups * self.d_state
+
+
+def mamba_specs(cfg: SSMConfig):
+    d = cfg.d_model
+    di, ds, ng, nh = cfg.d_inner, cfg.d_state, cfg.n_groups, cfg.n_heads
+    proj_out = 2 * di + 2 * ng * ds + nh  # z | x | B | C | dt
+    return {
+        "in_proj": ParamSpec((d, proj_out), ("embed", "ssm_inner")),
+        "conv_w": ParamSpec((cfg.d_conv, cfg.conv_dim), (None, "ssm_inner")),
+        "conv_b": ParamSpec((cfg.conv_dim,), ("ssm_inner",), init="zeros"),
+        "A_log": ParamSpec((nh,), (None,), init="ones"),
+        "D": ParamSpec((nh,), (None,), init="ones"),
+        "dt_bias": ParamSpec((nh,), (None,), init="zeros"),
+        "norm": ParamSpec((di,), ("ssm_inner",), init="ones"),
+        "out_proj": ParamSpec((di, d), ("ssm_inner", "embed")),
+    }
+
+
+def _split_proj(cfg: SSMConfig, proj):
+    di, ds, ng, nh = cfg.d_inner, cfg.d_state, cfg.n_groups, cfg.n_heads
+    z = proj[..., :di]
+    xbc = proj[..., di : di + cfg.conv_dim]
+    dt = proj[..., di + cfg.conv_dim :]
+    return z, xbc, dt
+
+
+def _split_xbc(cfg: SSMConfig, xbc):
+    di, ds, ng = cfg.d_inner, cfg.d_state, cfg.n_groups
+    x = xbc[..., :di]
+    bmat = xbc[..., di : di + ng * ds]
+    cmat = xbc[..., di + ng * ds :]
+    return x, bmat, cmat
+
+
+def _causal_conv(cfg: SSMConfig, params, xbc):
+    """Depthwise causal conv1d over time.  xbc [B, T, conv_dim]."""
+    w = params["conv_w"]  # [K, conv_dim]
+    k = cfg.d_conv
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(
+        pad[:, i : i + xbc.shape[1], :] * w[i] for i in range(k)
+    )
+    return jax.nn.silu(out + params["conv_b"])
+
+
+def ssd_chunked(cfg: SSMConfig, x, bmat, cmat, dt, h0=None, use_kernel=False):
+    """Chunked SSD scan.
+
+    x    [B, T, nh, hd]      (dt-scaled inputs are formed internally)
+    bmat [B, T, ng, ds]; cmat [B, T, ng, ds]; dt [B, T, nh] (post-softplus,
+    premultiplied by -exp(A_log) to give log-decay alog = dt * A).
+    Returns y [B, T, nh, hd] and final state h [B, nh, hd, ds].
+    """
+    if use_kernel:
+        from repro.kernels.ssm_scan import ops as ssm_ops
+
+        return ssm_ops.ssd_chunked(cfg, x, bmat, cmat, dt, h0)
+    b, t, nh, hd = x.shape
+    ng, ds = bmat.shape[2], bmat.shape[3]
+    q = min(cfg.chunk, t)
+    pad = (-t) % q
+    if pad:
+        # zero inputs + zero log-decay leave the state untouched
+        zf = lambda a: jnp.pad(
+            a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2)
+        )
+        x, bmat, cmat, dt = zf(x), zf(bmat), zf(cmat), zf(dt)
+    tpad = t + pad
+    nc = tpad // q
+    rep = nh // ng
+
+    # reshape into chunks
+    xc = x.reshape(b, nc, q, nh, hd)
+    bc = bmat.reshape(b, nc, q, ng, ds)
+    cc = cmat.reshape(b, nc, q, ng, ds)
+    # alog = dt * A  (A = -exp(A_log) folded in by caller via dt sign)
+    al = dt.reshape(b, nc, q, nh)  # log decay per step (negative)
+    cum = jnp.cumsum(al, axis=2)  # [b, nc, q, nh]
+
+    # broadcast groups to heads once (ng == 1 covers the common case)
+    bc_h = jnp.repeat(bc, rep, axis=3)  # [b,nc,q,nh,ds]
+    cc_h = jnp.repeat(cc, rep, axis=3)  # [b,nc,q,nh,ds]
+
+    # intra-chunk: attention-like masked product
+    # L[t,s] = exp(cum_t - cum_s) for s <= t
+    lmask = jnp.tril(jnp.ones((q, q), bool))[None, None, :, :, None]
+    ldiff = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # [b,nc,q,q,nh]
+    # safe-where: exp of masked (s > t) entries overflows and NaNs the
+    # backward pass — zero them BEFORE the exp
+    lfac = jnp.where(lmask, jnp.exp(jnp.where(lmask, ldiff, 0.0)), 0.0)
+    cb = jnp.einsum("bnqhs,bnphs->bnqph", cc_h, bc_h)  # [b,nc,q,q,nh]
+    y_intra = jnp.einsum("bnqph,bnqph,bnphd->bnqhd", cb, lfac, xc)
+
+    # chunk summaries: state contribution of each chunk
+    decay_out = jnp.exp(cum[:, :, -1:, :] - cum)  # [b,nc,q,nh]
+    bx = jnp.einsum("bnqhs,bnqh,bnqhd->bnhsd", bc_h, decay_out, xc)
+
+    # inter-chunk recurrence over nc chunks
+    chunk_decay = jnp.exp(cum[:, :, -1, :])  # [b, nc, nh]
+
+    def scan_body(h, inp):
+        bx_n, dec_n = inp  # [b,nh,ds,hd], [b,nh]
+        h_new = h * dec_n[:, :, None, None] + bx_n
+        return h_new, h  # emit state *entering* the chunk
+
+    bx_t = jnp.moveaxis(bx, 1, 0)  # [nc, b, nh, ds, hd]
+    dec_t = jnp.moveaxis(chunk_decay, 1, 0)  # [nc, b, nh]
+    if h0 is None:
+        h0 = jnp.zeros((b, nh, ds, hd), x.dtype)
+    h_final, h_in = jax.lax.scan(scan_body, h0, (bx_t, dec_t))
+    h_in = jnp.moveaxis(h_in, 0, 1)  # [b, nc, nh, ds, hd]
+
+    # inter-chunk output: y += exp(cum) * C h_in
+    decay_in = jnp.exp(cum)  # [b,nc,q,nh]
+    y_inter = jnp.einsum(
+        "bnqhs,bnqh,bnhsd->bnqhd", cc_h, decay_in, h_in
+    )
+    y = (y_intra + y_inter).reshape(b, tpad, nh, hd)[:, :t]
+    return y, h_final
+
+
+def mamba_forward(params, cfg: SSMConfig, x, use_kernel=False):
+    """x [B, T, d] -> y [B, T, d] (train / prefill)."""
+    proj = jnp.einsum("btd,dp->btp", x, params["in_proj"])
+    z, xbc, dtr = _split_proj(cfg, proj)
+    xbc = _causal_conv(cfg, params, xbc)
+    xi, bmat, cmat = _split_xbc(cfg, xbc)
+    b, t, _ = x.shape
+    nh, hd, ng, ds = cfg.n_heads, cfg.head_dim, cfg.n_groups, cfg.d_state
+    dt = jax.nn.softplus(dtr + params["dt_bias"])  # [B,T,nh]
+    a = -jnp.exp(params["A_log"])  # [nh]
+    xh = xi.reshape(b, t, nh, hd) * dt[..., None]  # dt-scaled input
+    alog = dt * a  # log decay
+    y, _ = ssd_chunked(
+        cfg,
+        xh,
+        bmat.reshape(b, t, ng, ds),
+        cmat.reshape(b, t, ng, ds),
+        alog,
+        use_kernel=use_kernel,
+    )
+    y = y + xi.reshape(b, t, nh, hd) * params["D"][:, None]
+    y = y.reshape(b, t, cfg.d_inner)
+    y = rmsnorm({"scale": params["norm"]}, y * jax.nn.silu(z))
+    return jnp.einsum("bti,id->btd", y, params["out_proj"])
+
+
+# ---------------------------------------------------------------------------
+# Decode (O(1) recurrent step)
+# ---------------------------------------------------------------------------
+
+
+def mamba_init_cache(cfg: SSMConfig, batch: int, dtype):
+    return {
+        "h": jnp.zeros(
+            (batch, cfg.n_heads, cfg.d_state, cfg.head_dim), dtype
+        ),
+        "conv": jnp.zeros((batch, cfg.d_conv - 1, cfg.conv_dim), dtype),
+    }
+
+
+def mamba_decode(params, cfg: SSMConfig, cache, x, pos):
+    """x [B, 1, d] -> y [B, 1, d]; state update in place of the scan."""
+    del pos
+    b = x.shape[0]
+    nh, hd, ng, ds = cfg.n_heads, cfg.head_dim, cfg.n_groups, cfg.d_state
+    proj = jnp.einsum("btd,dp->btp", x, params["in_proj"])
+    z, xbc, dtr = _split_proj(cfg, proj)
+    # conv over [cached history | current]
+    hist = jnp.concatenate([cache["conv"], xbc], axis=1)  # [B, K, conv_dim]
+    w = params["conv_w"]
+    conv_out = jnp.einsum("bkc,kc->bc", hist, w) + params["conv_b"]
+    xbc1 = jax.nn.silu(conv_out)[:, None, :]
+    xi, bmat, cmat = _split_xbc(cfg, xbc1)
+    dt = jax.nn.softplus(dtr + params["dt_bias"])[:, 0]  # [B, nh]
+    a = -jnp.exp(params["A_log"])
+    decay = jnp.exp(dt * a)  # [B, nh]
+    xh = xi.reshape(b, nh, hd) * dt[..., None]
+    bm = bmat.reshape(b, ng, ds)
+    bm = jnp.repeat(bm, nh // ng, axis=1)  # [B, nh, ds]
+    cm = cmat.reshape(b, ng, ds)
+    cm = jnp.repeat(cm, nh // ng, axis=1)
+    h = cache["h"] * decay[..., None, None] + jnp.einsum(
+        "bhs,bhd->bhsd", bm, xh
+    )
+    y = jnp.einsum("bhs,bhsd->bhd", cm, h)
+    y = y + xi.reshape(b, nh, hd) * params["D"][:, None]
+    y = y.reshape(b, 1, cfg.d_inner)
+    y = rmsnorm({"scale": params["norm"]}, y * jax.nn.silu(z))
+    y = jnp.einsum("bti,id->btd", y, params["out_proj"])
+    new_cache = {"h": h, "conv": hist[:, 1:, :]}
+    return y, new_cache

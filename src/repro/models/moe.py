@@ -1,0 +1,119 @@
+"""Mixture-of-Experts FFN with sort-based capacity dispatch.
+
+Design notes (TPU adaptation):
+* Experts are sharded over the ``model`` mesh axis (logical axis "experts");
+  dispatch/combine are gathers into an ``[E, C, d]`` buffer so the heavy data
+  movement partitions as all-to-all-style collectives rather than giant
+  scatters.
+* Capacity C = ceil(tokens * top_k / E * capacity_factor); overflowing tokens
+  are dropped (standard TPU practice), gates renormalized over the kept set.
+* Shared experts (DeepSeek-style) are a plain dense SwiGLU applied to every
+  token, fused with the routed output.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParamSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    d_model: int
+    n_experts: int
+    top_k: int
+    d_ff_expert: int
+    n_shared: int = 0  # shared experts (each of size d_ff_expert)
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.01
+
+
+def moe_specs(cfg: MoEConfig):
+    d, e, f = cfg.d_model, cfg.n_experts, cfg.d_ff_expert
+    specs = {
+        "router": ParamSpec((d, e), ("embed", "experts")),
+        "wg": ParamSpec((e, d, f), ("experts", "embed", "ffn")),
+        "wu": ParamSpec((e, d, f), ("experts", "embed", "ffn")),
+        "wd": ParamSpec((e, f, d), ("experts", "ffn", "embed")),
+    }
+    if cfg.n_shared:
+        fs = cfg.n_shared * f
+        specs["shared"] = {
+            "wg": ParamSpec((d, fs), ("embed", "ffn")),
+            "wu": ParamSpec((d, fs), ("embed", "ffn")),
+            "wd": ParamSpec((fs, d), ("ffn", "embed")),
+        }
+    return specs
+
+
+def _capacity(n_tokens: int, cfg: MoEConfig) -> int:
+    c = math.ceil(n_tokens * cfg.top_k / cfg.n_experts * cfg.capacity_factor)
+    return max(int(c), cfg.top_k)
+
+
+def moe_forward(params, cfg: MoEConfig, x):
+    """x [B, T, d] -> (y [B, T, d], aux_loss scalar)."""
+    b, t, d = x.shape
+    n = b * t
+    e, k = cfg.n_experts, cfg.top_k
+    cap = _capacity(n, cfg)
+    xf = x.reshape(n, d)
+
+    logits = jnp.einsum("nd,de->ne", xf, params["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, sel = jax.lax.top_k(probs, k)  # [n, k]
+    gates = gates / jnp.maximum(
+        jnp.sum(gates, axis=-1, keepdims=True), 1e-9
+    )
+
+    # ---- load-balance auxiliary loss (Switch-style) -----------------------
+    me = jnp.mean(probs, axis=0)  # mean router prob per expert
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(sel, e, dtype=jnp.float32), axis=1), axis=0
+    )  # fraction of tokens routed per expert
+    aux = cfg.router_aux_weight * e * jnp.sum(me * ce)
+
+    # ---- sort-based dispatch ----------------------------------------------
+    eid = sel.reshape(-1)  # [n*k]
+    order = jnp.argsort(eid, stable=True)  # group tokens by expert
+    eid_sorted = eid[order]
+    counts = jnp.bincount(eid, length=e)
+    starts = jnp.cumsum(counts) - counts  # exclusive cumsum
+    within = jnp.arange(n * k) - starts[eid_sorted]  # rank inside expert
+    valid = within < cap
+    # slot in the [E*C] buffer for each (token, choice), -1 if dropped
+    slot_sorted = jnp.where(valid, eid_sorted * cap + within, -1)
+    slots = jnp.zeros((n * k,), jnp.int32).at[order].set(
+        slot_sorted.astype(jnp.int32)
+    )
+
+    # gather tokens into the expert buffer [E*C, d]
+    tok_of_pair = jnp.arange(n * k) // k
+    buf_src = jnp.full((e * cap,), n, jnp.int32)  # n = "no token" row
+    scatter_idx = jnp.where(slots >= 0, slots, e * cap)  # OOB when dropped
+    buf_src = buf_src.at[scatter_idx].set(
+        tok_of_pair.astype(jnp.int32), mode="drop"
+    )
+    xf_pad = jnp.concatenate([xf, jnp.zeros((1, d), xf.dtype)], axis=0)
+    buf = xf_pad[buf_src].reshape(e, cap, d)
+
+    # ---- expert computation (batched over E; sharded over 'model') --------
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, params["wg"]))
+    h = h * jnp.einsum("ecd,edf->ecf", buf, params["wu"])
+    out = jnp.einsum("ecf,efd->ecd", h, params["wd"]).reshape(e * cap, d)
+
+    # ---- combine ------------------------------------------------------------
+    out_pad = jnp.concatenate([out, jnp.zeros((1, d), out.dtype)], axis=0)
+    picked = out_pad[jnp.where(slots >= 0, slots, e * cap)]  # [n*k, d]
+    w = jnp.where(slots >= 0, gates.reshape(-1), 0.0).astype(picked.dtype)
+    y = jnp.sum((picked * w[:, None]).reshape(n, k, d), axis=1)
+
+    if cfg.n_shared:
+        sp = params["shared"]
+        hs = jax.nn.silu(xf @ sp["wg"]) * (xf @ sp["wu"])
+        y = y + hs @ sp["wd"]
+    return y.reshape(b, t, d), aux

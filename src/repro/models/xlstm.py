@@ -1,0 +1,287 @@
+"""xLSTM blocks: mLSTM (matrix memory, parallel-trainable) and sLSTM
+(scalar memory, true recurrence) — Beck et al., arXiv:2405.04517.
+
+mLSTM training uses the parallel (attention-like) formulation with log-space
+gate stabilization; decode is the O(1) recurrent form with matrix memory
+C [B, H, Dh, Dh].  sLSTM is sequential by construction (recurrent gate
+dependency on h_{t-1}); training runs a ``lax.scan`` over time.
+
+Both are pre-norm residual blocks with input up-projection (factor 2) and
+gated down-projection, following the paper's block structure (d_ff = 0 in the
+assigned config: these blocks have no separate FFN).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParamSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class XLSTMConfig:
+    d_model: int
+    n_heads: int = 4
+    expand: int = 2
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_inner // self.n_heads
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def mlstm_specs(cfg: XLSTMConfig):
+    d, di, nh, dh = cfg.d_model, cfg.d_inner, cfg.n_heads, cfg.head_dim
+    return {
+        "w_up": ParamSpec((d, 2 * di), ("embed", "ssm_inner")),  # x | gate
+        "wq": ParamSpec((di, nh, dh), ("ssm_inner", "heads", "head")),
+        "wk": ParamSpec((di, nh, dh), ("ssm_inner", "heads", "head")),
+        "wv": ParamSpec((di, nh, dh), ("ssm_inner", "heads", "head")),
+        "w_i": ParamSpec((di, nh), ("ssm_inner", "heads")),  # input gate
+        "w_f": ParamSpec((di, nh), ("ssm_inner", "heads")),  # forget gate
+        "b_i": ParamSpec((nh,), ("heads",), init="zeros"),
+        "b_f": ParamSpec((nh,), ("heads",), init="ones"),
+        "norm": ParamSpec((di,), ("ssm_inner",), init="ones"),
+        "w_down": ParamSpec((di, d), ("ssm_inner", "embed")),
+    }
+
+
+def _mlstm_gates(params, xi):
+    """Raw (pre-activation) gates from the inner activations. [B,T,nh]."""
+    itil = jnp.einsum("bti,ih->bth", xi, params["w_i"]) + params["b_i"]
+    ftil = jnp.einsum("bti,ih->bth", xi, params["w_f"]) + params["b_f"]
+    return itil.astype(jnp.float32), ftil.astype(jnp.float32)
+
+
+def mlstm_forward(params, cfg: XLSTMConfig, x, chunk=256):
+    """Chunkwise-parallel training form (official xLSTM chunked schedule):
+    within a chunk the quadratic stabilized-gate product; across chunks the
+    recurrent matrix memory (C, n, m) is carried by a scan — O(chunk²) live
+    memory instead of O(T²).  x [B,T,d] -> [B,T,d]."""
+    b, t, _ = x.shape
+    nh, dh = cfg.n_heads, cfg.head_dim
+    up = jnp.einsum("btd,de->bte", x, params["w_up"])
+    xi, gate = jnp.split(up, 2, axis=-1)
+    q = jnp.einsum("bti,ihk->bthk", xi, params["wq"]) / (dh**0.5)
+    k = jnp.einsum("bti,ihk->bthk", xi, params["wk"])
+    v = jnp.einsum("bti,ihk->bthk", xi, params["wv"])
+    itil, ftil = _mlstm_gates(params, xi)
+    logf = jax.nn.log_sigmoid(ftil)  # [b,t,nh]
+
+    qc = min(chunk, t)
+    pad = (-t) % qc
+    if pad:
+        # zero-contribution padding: i-gate -inf-like, forget-gate log 0
+        zf = lambda a: jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2))
+        q, k, v = zf(q), zf(k), zf(v)
+        logf = zf(logf)
+        itil = jnp.pad(itil, ((0, 0), (0, pad), (0, 0)),
+                       constant_values=-1e30)
+    tpad = t + pad
+    nc = tpad // qc
+
+    def to_chunks(a):
+        return jnp.moveaxis(
+            a.reshape((b, nc, qc) + a.shape[2:]), 1, 0
+        )  # [nc, b, qc, ...]
+
+
+    qs, ks, vs = to_chunks(q), to_chunks(k), to_chunks(v)
+    its, lfs = to_chunks(itil), to_chunks(logf)
+    tri = jnp.tril(jnp.ones((qc, qc), bool))
+
+    def body(carry, inp):
+        c0, n0, m0 = carry  # [b,nh,dh,dh], [b,nh,dh], [b,nh]
+        qn, kn, vn, ii, lf = inp
+        fcum = jnp.cumsum(lf, axis=1)  # F_t  [b,qc,nh]
+        # intra log-weights D[t,s] = F_t - F_s + i_s  (s <= t)
+        dmat = fcum[:, :, None, :] - fcum[:, None, :, :] + ii[:, None, :, :]
+        # finite sentinel (not -inf): exp(-inf) NaNs the backward pass
+        dmat = jnp.where(tri[None, :, :, None], dmat, -1e30)
+        inter_log = m0[:, None, :] + fcum  # [b,qc,nh]
+        m_t = jnp.maximum(jnp.max(dmat, axis=2), inter_log)  # [b,qc,nh]
+        m_t = jnp.maximum(m_t, -1e30)
+        dexp = jnp.exp(dmat - m_t[:, :, None, :])  # [b,qc,qc,nh]
+        w_inter = jnp.exp(inter_log - m_t)  # [b,qc,nh]
+
+        sc = jnp.einsum("bthk,bshk->btsh", qn, kn).astype(jnp.float32)
+        sc = sc * dexp
+        num = jnp.einsum("btsh,bshk->bthk", sc.astype(vn.dtype), vn)
+        num = num + w_inter[..., None].astype(vn.dtype) * jnp.einsum(
+            "bthk,bhlk->bthl", qn, c0
+        )
+        den = jnp.sum(sc, axis=2) + w_inter * jnp.einsum(
+            "bthk,bhk->bth", qn, n0
+        ).astype(jnp.float32)
+        # clamp the guard exponent: for very negative m_t exp(-m_t)
+        # overflows f32 and NaNs the backward pass
+        den = jnp.maximum(jnp.abs(den), jnp.exp(jnp.minimum(-m_t, 30.0)))
+        h = num / den[..., None].astype(vn.dtype)
+
+        # ---- state update to chunk end -----------------------------------
+        f_all = fcum[:, -1, :]  # F_Q
+        m1 = jnp.maximum(
+            m0 + f_all, jnp.max(f_all[:, None, :] - fcum + ii, axis=1)
+        )
+        w_old = jnp.exp(m0 + f_all - m1)  # [b,nh]
+        w_new = jnp.exp(
+            f_all[:, None, :] - fcum + ii - m1[:, None, :]
+        )  # [b,qc,nh]
+        c1 = c0 * w_old[..., None, None].astype(c0.dtype) + jnp.einsum(
+            "bsh,bshk,bshl->bhkl", w_new.astype(vn.dtype), vn, kn
+        ).astype(c0.dtype)
+        n1 = n0 * w_old[..., None].astype(n0.dtype) + jnp.einsum(
+            "bsh,bshk->bhk", w_new.astype(kn.dtype), kn
+        ).astype(n0.dtype)
+        return (c1, n1, m1), h.astype(vn.dtype)
+
+    c0 = jnp.zeros((b, nh, dh, dh), v.dtype)
+    n0 = jnp.zeros((b, nh, dh), v.dtype)
+    m0 = jnp.full((b, nh), -1e30, jnp.float32)
+    _, hs = jax.lax.scan(body, (c0, n0, m0), (qs, ks, vs, its, lfs))
+    h = jnp.moveaxis(hs, 0, 1).reshape(b, tpad, cfg.d_inner)[:, :t]
+    # gated output + RMS norm + down projection
+    var = jnp.mean(
+        jnp.square(h.astype(jnp.float32)), axis=-1, keepdims=True
+    )
+    h = (h * jax.lax.rsqrt(var + 1e-6)).astype(x.dtype) * params["norm"]
+    h = h * jax.nn.silu(gate)
+    return jnp.einsum("bti,id->btd", h, params["w_down"])
+
+
+def mlstm_init_cache(cfg: XLSTMConfig, batch: int, dtype):
+    nh, dh = cfg.n_heads, cfg.head_dim
+    return {
+        "c": jnp.zeros((batch, nh, dh, dh), dtype),  # matrix memory
+        "n": jnp.zeros((batch, nh, dh), dtype),
+        "m": jnp.full((batch, nh), -1e30, jnp.float32),  # stabilizer
+    }
+
+
+def mlstm_decode(params, cfg: XLSTMConfig, cache, x, pos):
+    del pos
+    b = x.shape[0]
+    nh, dh = cfg.n_heads, cfg.head_dim
+    up = jnp.einsum("btd,de->bte", x, params["w_up"])
+    xi, gate = jnp.split(up, 2, axis=-1)
+    q = jnp.einsum("bti,ihk->bhk", xi, params["wq"]) / (dh**0.5)
+    k = jnp.einsum("bti,ihk->bhk", xi, params["wk"])
+    v = jnp.einsum("bti,ihk->bhk", xi, params["wv"])
+    itil, ftil = _mlstm_gates(params, xi)
+    itil, ftil = itil[:, 0], ftil[:, 0]  # [b, nh]
+
+    logf = jax.nn.log_sigmoid(ftil)
+    m_new = jnp.maximum(logf + cache["m"], itil)
+    fgate = jnp.exp(logf + cache["m"] - m_new)[..., None]
+    igate = jnp.exp(itil - m_new)[..., None]
+    c = cache["c"] * fgate[..., None] + igate[..., None] * jnp.einsum(
+        "bhk,bhl->bhkl", v, k
+    )
+    n = cache["n"] * fgate + igate * k
+    num = jnp.einsum("bhkl,bhl->bhk", c, q)
+    den = jnp.maximum(
+        jnp.abs(jnp.einsum("bhl,bhl->bh", n, q))[..., None],
+        jnp.exp(-m_new)[..., None],
+    )
+    h = (num / den).reshape(b, 1, cfg.d_inner)
+    var = jnp.mean(
+        jnp.square(h.astype(jnp.float32)), axis=-1, keepdims=True
+    )
+    h = (h * jax.lax.rsqrt(var + 1e-6)).astype(x.dtype) * params["norm"]
+    h = h * jax.nn.silu(gate)
+    y = jnp.einsum("bti,id->btd", h, params["w_down"])
+    return y, {"c": c, "n": n, "m": m_new}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def slstm_specs(cfg: XLSTMConfig):
+    # sLSTM is a true recurrence: tensor-parallelizing its inner dim would
+    # insert a resharding collective into every timestep of the scan (seen
+    # in the dry-run: ~1 all-to-all/step).  Its weights are tiny, so they
+    # are kept head-major and REPLICATED; parallelism comes from batch only.
+    d, di, nh, dh = cfg.d_model, cfg.d_inner, cfg.n_heads, cfg.head_dim
+    return {
+        "w_in": ParamSpec((d, nh, 4 * dh), ("embed", None, None)),  # z,i,f,o
+        "r": ParamSpec((nh, dh, 4 * dh), (None, None, None)),
+        "b": ParamSpec((nh, 4 * dh), (None, None), init="zeros"),
+        "norm": ParamSpec((di,), (None,), init="ones"),
+        "w_down": ParamSpec((di, d), (None, "embed")),
+    }
+
+
+def slstm_init_cache(cfg: XLSTMConfig, batch: int, dtype):
+    nh, dh = cfg.n_heads, cfg.head_dim
+    z = lambda: jnp.zeros((batch, nh, dh), dtype)
+    return {
+        "c": z(),
+        "n": jnp.ones((batch, nh, dh), dtype),
+        "h": z(),
+        "m": jnp.zeros((batch, nh, dh), jnp.float32),
+    }
+
+
+def _slstm_cell(params, cfg: XLSTMConfig, state, wx_t):
+    """One recurrence step.  wx_t [B, 4*di] (input contribution)."""
+    b = wx_t.shape[0]
+    nh, dh = cfg.n_heads, cfg.head_dim
+    rec = jnp.einsum("bhk,hkl->bhl", state["h"], params["r"])  # [b,nh,4dh]
+    raw = wx_t + rec + params["b"]
+    zt, it, ft, ot = jnp.split(raw, 4, axis=-1)
+    zt = jnp.tanh(zt)
+    ot = jax.nn.sigmoid(ot)
+    it = it.astype(jnp.float32)
+    logf = jax.nn.log_sigmoid(ft.astype(jnp.float32))
+    m_new = jnp.maximum(logf + state["m"], it)
+    i_s = jnp.exp(it - m_new)
+    f_s = jnp.exp(logf + state["m"] - m_new)
+    c = f_s.astype(zt.dtype) * state["c"] + i_s.astype(zt.dtype) * zt
+    n = f_s.astype(zt.dtype) * state["n"] + i_s.astype(zt.dtype)
+    h = ot * c / jnp.maximum(jnp.abs(n), 1e-6)
+    return {"c": c, "n": n, "h": h, "m": m_new}
+
+
+def slstm_forward(params, cfg: XLSTMConfig, x):
+    """Sequential scan over time.  x [B,T,d]."""
+    b, t, _ = x.shape
+    wx = jnp.einsum("btd,dhe->bthe", x, params["w_in"])  # [b,t,nh,4dh]
+    state = slstm_init_cache(cfg, b, x.dtype)
+
+    def body(st, wx_t):
+        st = _slstm_cell(params, cfg, st, wx_t)
+        return st, st["h"]
+
+    _, hs = jax.lax.scan(body, state, jnp.moveaxis(wx, 1, 0))
+    h = jnp.moveaxis(hs, 0, 1).reshape(b, t, cfg.d_inner)
+    var = jnp.mean(
+        jnp.square(h.astype(jnp.float32)), axis=-1, keepdims=True
+    )
+    h = (h * jax.lax.rsqrt(var + 1e-6)).astype(x.dtype) * params["norm"]
+    return jnp.einsum("bti,id->btd", h, params["w_down"])
+
+
+def slstm_decode(params, cfg: XLSTMConfig, cache, x, pos):
+    del pos
+    b = x.shape[0]
+    wx = jnp.einsum("btd,dhe->bthe", x, params["w_in"])[:, 0]
+    st = _slstm_cell(params, cfg, cache, wx)
+    h = st["h"].reshape(b, 1, cfg.d_inner)
+    var = jnp.mean(
+        jnp.square(h.astype(jnp.float32)), axis=-1, keepdims=True
+    )
+    h = (h * jax.lax.rsqrt(var + 1e-6)).astype(x.dtype) * params["norm"]
+    y = jnp.einsum("bti,id->btd", h, params["w_down"])
+    return y, st

@@ -1,0 +1,1 @@
+from repro.optim.optimizers import adam, adamw, sgd  # noqa: F401

@@ -1,0 +1,82 @@
+"""Optimizers built from scratch (no optax in this environment).
+
+Each optimizer is an (init, update) pair over parameter pytrees:
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params)
+    params = apply_updates(params, updates)
+
+Used by the all-reduce DDP baseline trainer and as the preconditioned
+local-step option for LT-ADMM-CC (beyond-paper: Adam-preconditioned local
+training).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Any
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Any
+    update: Any
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p + u).astype(p.dtype), params, updates)
+
+
+def sgd(lr: float, momentum: float = 0.0):
+    def init(params):
+        if momentum == 0.0:
+            return ()
+        return {"mu": jax.tree.map(jnp.zeros_like, params)}
+
+    def update(grads, state, params=None):
+        del params
+        if momentum == 0.0:
+            return jax.tree.map(lambda g: -lr * g, grads), state
+        mu = jax.tree.map(
+            lambda m, g: momentum * m + g, state["mu"], grads
+        )
+        return jax.tree.map(lambda m: -lr * m, mu), {"mu": mu}
+
+    return Optimizer(init, update)
+
+
+def adam(lr: float, b1=0.9, b2=0.999, eps=1e-8):
+    def init(params):
+        z = lambda: jax.tree.map(jnp.zeros_like, params)
+        return {"m": z(), "v": z(), "t": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params=None):
+        del params
+        t = state["t"] + 1
+        m = jax.tree.map(
+            lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], grads
+        )
+        v = jax.tree.map(
+            lambda v_, g: b2 * v_ + (1 - b2) * g * g, state["v"], grads
+        )
+        mh = 1.0 - b1 ** t.astype(jnp.float32)
+        vh = 1.0 - b2 ** t.astype(jnp.float32)
+        upd = jax.tree.map(
+            lambda m_, v_: -lr * (m_ / mh) / (jnp.sqrt(v_ / vh) + eps), m, v
+        )
+        return upd, {"m": m, "v": v, "t": t}
+
+    return Optimizer(init, update)
+
+
+def adamw(lr: float, b1=0.9, b2=0.999, eps=1e-8, weight_decay=0.01):
+    base = adam(lr, b1, b2, eps)
+
+    def update(grads, state, params):
+        upd, state = base.update(grads, state)
+        upd = jax.tree.map(
+            lambda u, p: u - lr * weight_decay * p, upd, params
+        )
+        return upd, state
+
+    return Optimizer(base.init, update)

@@ -1,0 +1,5 @@
+import jax
+
+# Tests run on the single host CPU device (the dry-run's 512-device world is
+# NOT set here on purpose — see launch/dryrun.py).
+jax.config.update("jax_platform_name", "cpu")

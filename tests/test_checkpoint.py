@@ -1,0 +1,27 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import load_checkpoint, save_checkpoint
+
+
+def test_roundtrip(tmp_path):
+    tree = {
+        "layer": {"w": jnp.arange(12.0).reshape(3, 4), "b": jnp.ones((4,))},
+        "step_scale": jnp.float32(0.5),
+    }
+    save_checkpoint(str(tmp_path / "ckpt"), tree, step=7,
+                    extra={"arch": "qwen3-0.6b"})
+    restored, manifest = load_checkpoint(str(tmp_path / "ckpt"), tree)
+    assert manifest["step"] == 7
+    assert manifest["extra"]["arch"] == "qwen3-0.6b"
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b))
+
+
+def test_manifest_lists_all_leaves(tmp_path):
+    tree = {"a": jnp.zeros((2,)), "nested": {"b": jnp.ones((3,))}}
+    save_checkpoint(str(tmp_path / "c"), tree)
+    raw, manifest = load_checkpoint(str(tmp_path / "c"))
+    assert sorted(manifest["keys"]) == ["a", "nested/b"]
+    assert manifest["shapes"]["nested/b"] == [3]

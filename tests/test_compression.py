@@ -1,0 +1,122 @@
+"""Compressor properties (paper Assumption 3) — hypothesis + statistics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import compression as C
+
+
+def _sds(x):
+    return jax.ShapeDtypeStruct(x.shape, x.dtype)
+
+
+COMPRESSORS = {
+    "q8": C.BBitQuantizer(bits=8),
+    "q4": C.BBitQuantizer(bits=4),
+    "randk_uniform": C.RandK(fraction=0.5, sampler="uniform"),
+    "randk_block": C.RandK(fraction=0.5, sampler="block"),
+    "identity": C.Identity(),
+}
+
+
+@pytest.mark.parametrize("name", list(COMPRESSORS))
+def test_zero_maps_to_zero(name):
+    """C(0) = 0 exactly — required for message-consistent initialization."""
+    comp = COMPRESSORS[name]
+    x = jnp.zeros((64,))
+    for seed in range(5):
+        key = jax.random.key(seed)
+        rec = comp.decompress(key, comp.compress(key, x), _sds(x))
+        assert (rec == 0).all()
+
+
+@pytest.mark.parametrize("name", ["q8", "q4", "randk_uniform", "randk_block"])
+def test_unbiasedness(name):
+    """E[C(x)] = x within 5 sigma of the Monte-Carlo error."""
+    comp = COMPRESSORS[name]
+    x = jax.random.normal(jax.random.key(42), (32,))
+    n_trials = 3000
+
+    def one(seed):
+        key = jax.random.key(seed)
+        return comp.decompress(key, comp.compress(key, x), _sds(x))
+
+    recs = jax.vmap(one)(jnp.arange(n_trials))
+    mean = jnp.mean(recs, axis=0)
+    std_err = jnp.std(recs, axis=0) / np.sqrt(n_trials)
+    # 5-sigma + small absolute slack (coordinates with deterministic
+    # reconstruction, e.g. the inf-norm element, have std_err == 0)
+    viol = jnp.abs(mean - x) - (5.0 * std_err + 1e-5)
+    assert float(jnp.max(viol)) < 0.0, float(jnp.max(viol))
+
+
+@pytest.mark.parametrize("name", ["q8", "randk_uniform", "randk_block"])
+def test_variance_bound(name):
+    """E||C(x) - x||^2 <= (p - 1) ||x||^2 with p = comp.variance_p."""
+    comp = COMPRESSORS[name]
+    x = jax.random.normal(jax.random.key(7), (40,))
+    p = comp.variance_p(x.shape)
+
+    def one(seed):
+        key = jax.random.key(seed)
+        rec = comp.decompress(key, comp.compress(key, x), _sds(x))
+        return jnp.sum((rec - x) ** 2)
+
+    errs = jax.vmap(one)(jnp.arange(2000))
+    bound = (p - 1.0) * float(jnp.sum(x * x))
+    assert float(jnp.mean(errs)) <= bound * 1.1 + 1e-6
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(2, 300),
+    seed=st.integers(0, 2**30),
+    frac=st.floats(0.1, 1.0),
+)
+def test_randk_seed_sync(n, seed, frac):
+    """Sender/receiver derive identical index sets from the shared key, so
+    scatter(gather(x)) touches exactly k coordinates with scale n/k."""
+    comp = C.RandK(fraction=frac, sampler="uniform")
+    x = jnp.arange(1.0, n + 1.0)
+    key = jax.random.key(seed)
+    rec = comp.decompress(key, comp.compress(key, x), _sds(x))
+    k = comp._k(n)
+    nz = int(jnp.sum(rec != 0))
+    assert nz == k
+    # every nonzero entry equals (n/k) * x at that coordinate
+    idx = jnp.nonzero(rec)[0]
+    np.testing.assert_allclose(
+        np.asarray(rec[idx]), np.asarray(x[idx] * n / k), rtol=1e-5
+    )
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(1, 500), seed=st.integers(0, 2**30))
+def test_pack4_roundtrip(n, seed):
+    """Nibble packing is lossless for values in [-7, 7]."""
+    q = jax.random.randint(jax.random.key(seed), (n,), -7, 8).astype(jnp.int8)
+    packed = C._pack4(q)
+    assert packed.nbytes <= (n + 1) // 2 + 1
+    un = C._unpack4(packed, n)
+    assert (un == q).all()
+
+
+def test_wire_bytes_accounting():
+    q8, q4 = C.BBitQuantizer(8), C.BBitQuantizer(4)
+    rk = C.RandK(fraction=0.25)
+    assert q8.wire_bytes((1000,), jnp.float32) == 1004
+    assert q4.wire_bytes((1000,), jnp.float32) == 504
+    assert rk.wire_bytes((1000,), jnp.float32) == 250 * 4
+    tree = {"a": jnp.zeros((10, 10)), "b": jnp.zeros((50,))}
+    assert C.tree_wire_bytes(q8, tree) == (100 + 4) + (50 + 4)
+
+
+def test_topk_selects_largest():
+    comp = C.TopK(fraction=0.2)
+    x = jnp.array([0.1, -5.0, 0.2, 3.0, -0.05, 0.3, 1.0, -2.0, 0.0, 0.4])
+    key = jax.random.key(0)
+    rec = comp.decompress(key, comp.compress(key, x), _sds(x))
+    assert rec[1] == -5.0 and rec[3] == 3.0
+    assert int(jnp.sum(rec != 0)) == 2

@@ -1,0 +1,21 @@
+"""SPMD equivalence tests (subprocess: needs its own 8-device world)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+
+@pytest.mark.timeout(600)
+def test_spmd_matches_host_simulation():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(
+        os.path.dirname(__file__), "..", "src"
+    ) + os.pathsep + env.get("PYTHONPATH", "")
+    script = os.path.join(os.path.dirname(__file__), "_distributed_check.py")
+    res = subprocess.run(
+        [sys.executable, script],
+        capture_output=True, text=True, env=env, timeout=570,
+    )
+    assert res.returncode == 0, res.stdout + "\n" + res.stderr
+    assert "ALL DISTRIBUTED CHECKS PASSED" in res.stdout

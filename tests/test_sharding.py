@@ -1,0 +1,64 @@
+"""Sharding rule unit tests (run inside an 8-device subprocess-free world:
+sanitization logic is mesh-shape arithmetic, a tiny host mesh suffices)."""
+import types
+
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.launch import sharding as shd
+from repro.models.common import ParamSpec
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    # sanitization is pure mesh-shape arithmetic; a stand-in suffices and
+    # keeps the test independent of the host device count
+    return types.SimpleNamespace(
+        shape={"data": 4, "model": 2}, axis_names=("data", "model")
+    )
+
+
+def test_sanitize_drops_nondivisible(mesh):
+    model = mesh.shape["model"]
+    ok = shd.sanitize_spec(mesh, (4 * model, 8), P("model", None))
+    assert ok == P("model", None)
+    bad = shd.sanitize_spec(mesh, (model + 1, 8), P("model", None))
+    assert bad == P(None, None)
+
+
+def test_sanitize_tuple_prefix(mesh):
+    d, m = mesh.shape["data"], mesh.shape["model"]
+    full = shd.sanitize_spec(mesh, (d * m, 4), P(("data", "model"), None))
+    assert full == P(("data", "model"), None)
+    partial = shd.sanitize_spec(mesh, (d, 4), P(("data", "model"), None))
+    assert partial == P(("data",), None)
+
+
+def test_param_pspec_respects_logical_axes(mesh):
+    specs = {
+        "w": ParamSpec((64, 8 * mesh.shape["model"]), ("embed", "ffn")),
+        "ln": ParamSpec((64,), ("embed",), init="ones"),
+    }
+    ps = shd.param_pspec(mesh, "admm", specs)
+    assert ps["w"] == P(None, "model")  # admm mode: no FSDP on single pod
+    ps_serve = shd.param_pspec(mesh, "serve", specs)
+    assert ps_serve["w"][1] == "model"
+
+
+def test_batch_pspec_long_context_falls_to_seq(mesh):
+    d = mesh.shape["data"]
+    # batch divisible -> batch sharded  (P normalizes ('data',) -> 'data')
+    sp = shd.batch_pspec(mesh, (4 * d, 128, 64))
+    assert sp[0] in ("data", ("data",))
+    # batch=1 -> sequence dim picks up the data axis
+    sp1 = shd.batch_pspec(mesh, (1, 128 * d, 64))
+    assert sp1[0] is None and sp1[1] in ("data", ("data",))
+
+
+def test_prefix_pspec():
+    tree = {"a": P("model"), "b": P(None, "model")}
+    out = shd.prefix_pspec(tree, "data")
+    assert out["a"] == P("data", "model")
+    assert out["b"] == P("data", None, "model")

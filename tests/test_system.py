@@ -1,0 +1,108 @@
+"""End-to-end system tests: LT-ADMM-CC trains a real (small) transformer.
+
+This is the paper's method running on the actual model stack — agents hold
+heterogeneous local data, train locally with SVRG, and exchange compressed
+messages on a ring; loss must drop and agents must approach consensus.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.archs import qwen3_smoke
+from repro.core import admm, compression, vr
+from repro.core.topology import Exchange, Ring
+from repro.data import SyntheticLMDataset
+from repro.models import transformer as tr
+from repro.models.common import init_params
+from repro.optim import optimizers
+
+
+def _mean_loss(cfg, state_x, data):
+    params_bar = jax.tree.map(lambda t: jnp.mean(t, axis=0), state_x)
+    losses = jax.vmap(
+        lambda d: tr.loss_fn(params_bar, cfg, {"tokens": d})
+    )(data["tokens"])
+    return float(jnp.mean(losses))
+
+
+def test_lt_admm_cc_trains_lm():
+    cfg = qwen3_smoke()
+    n_agents, m_local, seq = 4, 8, 32
+    topo = Ring(n_agents)
+    ex = Exchange(topo)
+    ds = SyntheticLMDataset(
+        vocab=cfg.vocab, seq_len=seq, n_agents=n_agents, m_local=m_local,
+        heterogeneity=0.7,
+    )
+    data = {"tokens": ds.sample(jax.random.key(0))}
+
+    loss = lambda p, b: tr.loss_fn(p, cfg, b)  # noqa: E731
+    grad = jax.grad(loss)
+    est = vr.SvrgAnchor(batch_grad=grad, full_grad=grad)
+    comp = compression.BBitQuantizer(bits=8)
+    acfg = admm.LTADMMConfig(
+        rho=0.1, beta=0.005, gamma=0.05, tau=3, batch_size=2,
+        compressor_x=comp, compressor_z=comp,
+    )
+    params0 = init_params(jax.random.key(1), tr.model_specs(cfg))
+    x0 = jax.tree.map(
+        lambda t: jnp.broadcast_to(t[None], (n_agents,) + t.shape), params0
+    )
+    state = admm.init(acfg, topo, ex, x0)
+    step = jax.jit(
+        lambda s, k: admm.step(acfg, topo, ex, est, s, data, k)
+    )
+    loss0 = _mean_loss(cfg, state.x, data)
+    for i in range(10):
+        state = step(state, jax.random.key(10 + i))
+    loss1 = _mean_loss(cfg, state.x, data)
+    assert np.isfinite(loss1)
+    assert loss1 < loss0 - 0.1, (loss0, loss1)
+    # agents stay near consensus (compressed ring still synchronizes)
+    cerr = float(admm.consensus_error(state))
+    xnorm = sum(float(jnp.sum(t**2)) for t in jax.tree.leaves(state.x))
+    assert cerr < 0.05 * xnorm, (cerr, xnorm)
+
+
+def test_ddp_reference_trains_lm():
+    """The all-reduce baseline the paper's method replaces."""
+    cfg = qwen3_smoke()
+    ds = SyntheticLMDataset(
+        vocab=cfg.vocab, seq_len=32, n_agents=1, m_local=32
+    )
+    tokens = ds.sample(jax.random.key(0))[0]
+    params = init_params(jax.random.key(1), tr.model_specs(cfg))
+    opt = optimizers.adam(1e-3)
+    opt_state = opt.init(params)
+
+    @jax.jit
+    def ddp_step(params, opt_state, batch):
+        l, g = jax.value_and_grad(
+            lambda p: tr.loss_fn(p, cfg, {"tokens": batch})
+        )(params)
+        upd, opt_state = opt.update(g, opt_state, params)
+        return optimizers.apply_updates(params, upd), opt_state, l
+
+    losses = []
+    for i in range(12):
+        batch = tokens[(4 * i) % 32 : (4 * i) % 32 + 4]
+        params, opt_state, l = ddp_step(params, opt_state, batch)
+        losses.append(float(l))
+    assert losses[-1] < losses[0] - 0.2, losses
+
+
+def test_wire_savings_vs_ddp():
+    """Per outer round, compressed LT-ADMM-CC moves >8x fewer bytes than tau
+    steps of float32 ring all-reduce DDP (8-bit messages, 2 msgs/neighbor)."""
+    from repro.core.compression import tree_wire_bytes
+
+    cfg = qwen3_smoke()
+    params = init_params(jax.random.key(1), tr.model_specs(cfg))
+    comp = compression.BBitQuantizer(bits=8)
+    acfg = admm.LTADMMConfig(compressor_x=comp, compressor_z=comp, tau=5)
+    admm_bytes = admm.wire_bytes_per_round(acfg, Ring(10), params)
+    f32_bytes = tree_wire_bytes(compression.Identity(), params)
+    ddp_bytes_per_round = acfg.tau * 2 * f32_bytes  # ring all-reduce ~ 2x vol
+    assert admm_bytes < ddp_bytes_per_round / 8, (
+        admm_bytes, ddp_bytes_per_round,
+    )

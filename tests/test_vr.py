@@ -1,0 +1,102 @@
+"""Variance-reduced estimator properties (paper eq. (8))."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import vr
+from repro.problems.logistic import LogisticProblem
+
+PROB = LogisticProblem(n=4, n_agents=1, m=20)
+DATA_ALL = PROB.make_data(jax.random.key(3))
+DATA = jax.tree.map(lambda t: t[0], DATA_ALL)  # one agent's shard
+
+SAGA = vr.SagaTable(sample_grad=PROB.sample_grad, m=PROB.m)
+SVRG = vr.SvrgAnchor(batch_grad=PROB.batch_grad, full_grad=PROB.full_grad)
+
+
+def test_saga_reset_table_is_full_gradient():
+    x = jax.random.normal(jax.random.key(0), (PROB.n,))
+    st = SAGA.reset(x, DATA)
+    g_full = PROB.full_grad(x, DATA)
+    np.testing.assert_allclose(
+        np.asarray(st.mean), np.asarray(g_full), rtol=1e-5
+    )
+    # at the reset point the estimator is exactly the full gradient
+    g, _ = SAGA.estimate(st, x, DATA, jnp.array([3]))
+    np.testing.assert_allclose(np.asarray(g), np.asarray(g_full), rtol=1e-5)
+
+
+def test_saga_unbiased_at_new_point():
+    x = jax.random.normal(jax.random.key(0), (PROB.n,))
+    phi = x + 0.1 * jax.random.normal(jax.random.key(1), (PROB.n,))
+    st = SAGA.reset(x, DATA)
+    g_true = PROB.full_grad(phi, DATA)
+
+    def one(seed):
+        idx = jax.random.randint(jax.random.key(seed), (1,), 0, PROB.m)
+        g, _ = SAGA.estimate(st, phi, DATA, idx)
+        return g
+
+    gs = jax.vmap(one)(jnp.arange(4000))
+    err = jnp.mean(gs, axis=0) - g_true
+    se = jnp.std(gs, axis=0) / np.sqrt(4000)
+    assert float(jnp.max(jnp.abs(err) / jnp.maximum(se, 1e-9))) < 5.0
+
+
+def test_saga_table_refresh():
+    x = jax.random.normal(jax.random.key(0), (PROB.n,))
+    phi = x * 0.5
+    st = SAGA.reset(x, DATA)
+    idx = jnp.array([7])
+    _, st2 = SAGA.estimate(st, phi, DATA, idx)
+    expected_row = PROB.sample_grad(phi, jax.tree.map(lambda t: t[7], DATA))
+    got = jax.tree.map(lambda t: t[7], st2.table)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(expected_row), rtol=1e-5
+    )
+    # running mean matches table mean
+    np.testing.assert_allclose(
+        np.asarray(st2.mean),
+        np.asarray(jnp.mean(st2.table, axis=0)),
+        rtol=1e-4, atol=1e-6,
+    )
+
+
+def test_svrg_unbiased_and_exact_at_anchor():
+    x = jax.random.normal(jax.random.key(0), (PROB.n,))
+    st = SVRG.reset(x, DATA)
+    g_anchor, _ = SVRG.estimate(st, x, DATA, jnp.array([2]))
+    np.testing.assert_allclose(
+        np.asarray(g_anchor), np.asarray(PROB.full_grad(x, DATA)), rtol=1e-5
+    )
+    phi = x + 0.2
+    g_true = PROB.full_grad(phi, DATA)
+
+    def one(seed):
+        idx = jax.random.randint(jax.random.key(seed), (2,), 0, PROB.m)
+        g, _ = SVRG.estimate(st, phi, DATA, idx)
+        return g
+
+    gs = jax.vmap(one)(jnp.arange(4000))
+    err = jnp.mean(gs, axis=0) - g_true
+    se = jnp.std(gs, axis=0) / np.sqrt(4000)
+    assert float(jnp.max(jnp.abs(err) / jnp.maximum(se, 1e-9))) < 5.0
+
+
+def test_variance_reduction_near_anchor():
+    """Near the anchor, SVRG variance << plain-SGD variance."""
+    x = jax.random.normal(jax.random.key(0), (PROB.n,))
+    st = SVRG.reset(x, DATA)
+    sgd = vr.PlainSgd(batch_grad=PROB.batch_grad)
+    phi = x + 0.01
+
+    def est_var(est, state):
+        def one(seed):
+            idx = jax.random.randint(jax.random.key(seed), (1,), 0, PROB.m)
+            g, _ = est.estimate(state, phi, DATA, idx)
+            return g
+
+        gs = jax.vmap(one)(jnp.arange(800))
+        return float(jnp.mean(jnp.var(gs, axis=0)))
+
+    assert est_var(SVRG, st) < 0.01 * est_var(sgd, ())
