@@ -7,14 +7,19 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import admm
-from repro.core.topology import Exchange, Ring
+from repro.core.topology import Exchange, make_topology
 from repro.problems.logistic import LogisticProblem
 
 
-def make_problem(seed=0):
+def make_problem(seed=0, topology="ring"):
+    """Paper-scale convex problem on any agent graph family.
+
+    ``topology`` is a ``make_topology`` spec string ("ring", "star",
+    "complete", "grid2d", "erdos:p=0.4", ...).
+    """
     prob = LogisticProblem()
     data = prob.make_data(jax.random.key(seed))
-    topo = Ring(prob.n_agents)
+    topo = make_topology(topology, prob.n_agents)
     ex = Exchange(topo)
     return prob, data, topo, ex
 

@@ -12,7 +12,7 @@ import time
 
 def main() -> None:
     from benchmarks import kernels_bench, paper_fig1, paper_fig2, paper_table1
-    from benchmarks import roofline
+    from benchmarks import roofline, topology_sweep
 
     t0 = time.time()
     print("name,us_per_call,derived")
@@ -21,6 +21,10 @@ def main() -> None:
               f";wire_bytes_per_round={wire}")
     for name, ttt, floor in paper_fig2.run(print_rows=False):
         print(f"{name},,time_to_1e-8={ttt:.0f};floor={floor:.3e}")
+    for name, final, rate, wire, t_round in topology_sweep.run(
+            print_rows=False):
+        print(f"{name},,final_gradnorm2={final:.3e};rate_per_round={rate:.4f}"
+              f";wire_bytes_per_round={wire};t_per_round={t_round:.1f}")
     for name, val in paper_table1.run(print_rows=False):
         print(f"{name},,cost={val}")
     for name, us, derived in kernels_bench.run(print_rows=False):

@@ -3,21 +3,30 @@
 LT-ADMM-CC on the paper's logistic-regression task (ring N=10, n=5,
 m_i=100, |B|=1): stochastic gradients + 8-bit compressed messages, yet
 EXACT convergence — ||∇F(x̄_k)||² falls linearly to float32 precision.
+Theorem 1 holds on any connected graph — try ``--topology star`` or
+``--topology erdos:p=0.4`` (see benchmarks/topology_sweep.py for a
+side-by-side comparison).
 
-    PYTHONPATH=src python examples/quickstart.py
+    PYTHONPATH=src python examples/quickstart.py [--topology ring]
 """
+import argparse
+
 import jax
 import jax.numpy as jnp
 
 from repro.core import admm, compression, vr
-from repro.core.topology import Exchange, Ring
+from repro.core.topology import Exchange, make_topology
 from repro.problems.logistic import LogisticProblem
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--topology", default="ring")
+    args = ap.parse_args()
     prob = LogisticProblem()  # paper §III settings
     data = prob.make_data(jax.random.key(0))
-    topo, ex = Ring(prob.n_agents), Exchange(Ring(prob.n_agents))
+    topo = make_topology(args.topology, prob.n_agents)
+    ex = Exchange(topo)
 
     cfg = admm.LTADMMConfig(  # paper: tau=5 rho=0.1 beta=0.2 gamma=0.3 r=1
         compressor_x=compression.BBitQuantizer(bits=8),

@@ -3,8 +3,12 @@
 Global-view formulation: every state tensor carries a leading **agent axis**
 ``A``; per-agent math is ``vmap``-ed and the only cross-agent operations are
 the two neighbor exchanges (x-messages and z-messages) routed through
-``topology.Exchange`` — a ``collective-permute`` on the mesh agent axis in
-production, a ``jnp.roll`` in host simulation.  The same code therefore runs:
+``topology.Exchange`` — collective-permutes on the mesh agent axis in
+production, a gather-by-index in host simulation.  All graph structure
+(neighbor slots, per-agent degrees, slot masks) comes from the
+``topology.Topology`` object — ring, torus, star, complete and random
+graphs all run through this one implementation.  The same code therefore
+runs:
 
 * on one CPU device (paper-scale repro and tests),
 * sharded over the ``data`` axis of a 16x16 pod (agents = data slices),
@@ -44,9 +48,11 @@ from typing import Any, NamedTuple
 import jax
 import jax.numpy as jnp
 
+import numpy as np
+
 from repro.common.trees import tree_lerp, tree_map, tree_sub, tree_zeros_like
 from repro.core import compression
-from repro.core.topology import Exchange, Ring
+from repro.core.topology import Exchange, Topology
 
 
 @dataclasses.dataclass(frozen=True)
@@ -88,7 +94,7 @@ def _slot(tree, s):
     return tree_map(lambda x: x[:, s], tree)
 
 
-def init(cfg: LTADMMConfig, topo: Ring, exchange: Exchange, x0):
+def init(cfg: LTADMMConfig, topo: Topology, exchange: Exchange, x0):
     """x0: params with leading agent axis [A, ...]."""
     zeros_edge = _stack_slots(
         tuple(tree_zeros_like(x0) for _ in range(topo.n_slots))
@@ -134,14 +140,24 @@ def _like_per_agent(stacked):
     )
 
 
-def local_phase(cfg: LTADMMConfig, topo: Ring, vr_est, x, z, data, round_key):
-    """Lines 2-8: tau VR-gradient steps per agent.  Returns x_{k+1} [A,...]."""
-    d_i = float(topo.degree)
+def local_phase(cfg: LTADMMConfig, topo: Topology, vr_est, x, z, data,
+                round_key):
+    """Lines 2-8: tau VR-gradient steps per agent.  Returns x_{k+1} [A,...].
+
+    ``d_i`` is the per-agent degree vector of the topology — heterogeneous
+    for non-regular graphs (star, random) — broadcast over the parameter
+    dims of each leaf.  ``z`` is zero on masked slots, so the plain slot-sum
+    is the sum over actual incident edges.
+    """
     A = jax.tree.leaves(x)[0].shape[0]
     m = jax.tree.leaves(data)[0].shape[1]
+    d = jnp.asarray(topo.degrees(), jax.tree.leaves(x)[0].dtype)
     z_sum = tree_map(lambda t: jnp.sum(t, axis=1), z)
     corr = tree_map(
-        lambda xs, zs: cfg.beta * (cfg.r**2 * cfg.rho * d_i * xs - cfg.r * zs),
+        lambda xs, zs: cfg.beta * (
+            cfg.r**2 * cfg.rho * d.reshape((A,) + (1,) * (xs.ndim - 1)) * xs
+            - cfg.r * zs
+        ),
         x,
         z_sum,
     )
@@ -166,20 +182,42 @@ def local_phase(cfg: LTADMMConfig, topo: Ring, vr_est, x, z, data, round_key):
     return jax.vmap(one_agent)(x, corr, data, jnp.arange(A))
 
 
+def _mask_slot(tree, mask_s):
+    """Zero a per-slot [A, ...] tree where the slot is inactive."""
+    if bool(np.all(mask_s)):
+        return tree
+    m = np.asarray(mask_s)
+    return tree_map(
+        lambda t: jnp.where(m.reshape((m.shape[0],) + (1,) * (t.ndim - 1)),
+                            t, 0), tree
+    )
+
+
 def step(
     cfg: LTADMMConfig,
-    topo: Ring,
+    topo: Topology,
     exchange: Exchange,
     vr_est,
     state: LTADMMState,
     data,
     round_key,
 ):
-    """One outer round of Algorithm 1.  ``data`` leaves: [A, m, ...]."""
+    """One outer round of Algorithm 1.  ``data`` leaves: [A, m, ...].
+
+    All graph structure comes from ``topo``: slot ``sl`` of agent ``i``
+    names the incident edge to ``neighbor_table()[i, sl]`` (or is masked).
+    Masked slots still move a (self-addressed) message through the
+    exchange so both Exchange implementations stay bit-identical, but all
+    edge state on them is forced to zero, which makes the slot-sum in
+    ``local_phase`` and the stored s/s̃ mirrors exact for heterogeneous
+    degrees.
+    """
     A = topo.n_agents
     agent_ids = jnp.arange(A)
     like = _like_per_agent(state.x)
     cx, cz = cfg.compressor_x, cfg.compressor_z
+    nbr_table = topo.neighbor_table()  # [A, S] numpy, self where masked
+    slot_mask = topo.slot_mask()  # [A, S] numpy bool
 
     # ---- 1. local training ------------------------------------------------
     x_new = local_phase(cfg, topo, vr_est, state.x, state.z, data, round_key)
@@ -201,10 +239,7 @@ def step(
     x_hat_new = tree_map(jnp.add, u_new, dx)
 
     # ---- 5-6. sender-side error feedback for z (per edge slot) ------------
-    nbr_ids = [
-        (agent_ids - 1) % A,  # slot 0: left neighbor
-        (agent_ids + 1) % A,  # slot 1: right neighbor
-    ]
+    nbr_ids = [jnp.asarray(nbr_table[:, sl]) for sl in range(topo.n_slots)]
     m_z, z_hat_own = [], []
     for sl in range(topo.n_slots):
         def compress_z(aid, nid, delta):
@@ -216,7 +251,10 @@ def step(
         delta = tree_sub(_slot(state.z, sl), _slot(state.s, sl))
         p, rec = jax.vmap(compress_z)(agent_ids, nbr_ids[sl], delta)
         m_z.append(p)
-        z_hat_own.append(tree_map(jnp.add, _slot(state.s, sl), rec))
+        z_hat_own.append(
+            _mask_slot(tree_map(jnp.add, _slot(state.s, sl), rec),
+                       slot_mask[:, sl])
+        )
 
     # ---- the only cross-agent communication --------------------------------
     recv_x = exchange.gather_from_neighbors(m_x)
@@ -246,22 +284,28 @@ def step(
             )
 
         dzr = jax.vmap(decomp_z)(nbr_ids[sl], agent_ids, recv_z[sl])
-        z_hat_nbr.append(tree_map(jnp.add, _slot(state.s_tilde, sl), dzr))
+        z_hat_nbr.append(
+            _mask_slot(tree_map(jnp.add, _slot(state.s_tilde, sl), dzr),
+                       slot_mask[:, sl])
+        )
 
     # ---- 8. z update, eq. (4) ----------------------------------------------
     z_new = []
     rrho = cfg.r * cfg.rho
     for sl in range(topo.n_slots):
         z_new.append(
-            tree_map(
-                lambda zo, zn, xn, xh, xhj: 0.5 * (zo - zn)
-                + rrho * xn
-                - rrho * (xh - xhj),
-                z_hat_own[sl],
-                z_hat_nbr[sl],
-                x_new,
-                x_hat_new,
-                x_hat_nbr_new[sl],
+            _mask_slot(
+                tree_map(
+                    lambda zo, zn, xn, xh, xhj: 0.5 * (zo - zn)
+                    + rrho * xn
+                    - rrho * (xh - xhj),
+                    z_hat_own[sl],
+                    z_hat_nbr[sl],
+                    x_new,
+                    x_hat_new,
+                    x_hat_nbr_new[sl],
+                ),
+                slot_mask[:, sl],
             )
         )
 
@@ -293,9 +337,19 @@ def consensus_error(state: LTADMMState):
     return sum(jax.tree.leaves(sq))
 
 
-def wire_bytes_per_round(cfg: LTADMMConfig, topo: Ring, params) -> int:
-    """Bytes each agent transmits per outer round: one x-message to every
-    neighbor + one z-message per incident edge (the paper's '2 t_c')."""
+def wire_bytes_per_round(cfg: LTADMMConfig, topo: Topology, params) -> int:
+    """Bytes the busiest agent transmits per outer round: one x-message to
+    every neighbor + one z-message per incident edge (the paper's '2 t_c').
+    On non-regular graphs this is the bottleneck (max-degree) agent; see
+    ``wire_bytes_total`` for aggregate traffic."""
     bx = compression.tree_wire_bytes(cfg.compressor_x, params)
     bz = compression.tree_wire_bytes(cfg.compressor_z, params)
-    return topo.degree * (bx + bz)
+    return int(np.max(topo.degrees())) * (bx + bz)
+
+
+def wire_bytes_total(cfg: LTADMMConfig, topo: Topology, params) -> int:
+    """Aggregate bytes on the wire per outer round, summed over agents
+    (= 2 |E| * per-edge payload on any graph)."""
+    bx = compression.tree_wire_bytes(cfg.compressor_x, params)
+    bz = compression.tree_wire_bytes(cfg.compressor_z, params)
+    return int(np.sum(topo.degrees())) * (bx + bz)

@@ -2,36 +2,53 @@
 
 Single pod:  16 x 16 = 256 chips, axes ("data", "model").
 Multi-pod:   2 x 16 x 16 = 512 chips, axes ("pod", "data", "model") — the
-"pod" axis crosses the slow inter-pod links; LT-ADMM-CC's agent ring lives
+"pod" axis crosses the slow inter-pod links; LT-ADMM-CC's agent graph lives
 there in hierarchical mode (DESIGN.md §3).
 
 Defined as FUNCTIONS so importing this module never touches jax device
 state; the dry-run sets XLA_FLAGS before any jax initialization.
+
+jax-version floor 0.4.37: ``jax.sharding.AxisType`` (and the
+``axis_types=`` kwarg of ``jax.make_mesh``) only exist on newer jax;
+both are optional here — Auto is the default behavior on old versions.
 """
 from __future__ import annotations
 
+import inspect
+
 import jax
-from jax.sharding import AxisType
+
+try:  # jax >= 0.5.x
+    from jax.sharding import AxisType
+except ImportError:  # 0.4.x: meshes are implicitly Auto
+    AxisType = None
+
+_MAKE_MESH_HAS_AXIS_TYPES = (
+    "axis_types" in inspect.signature(jax.make_mesh).parameters
+)
+
+
+def _make_mesh(shape, axes):
+    if AxisType is not None and _MAKE_MESH_HAS_AXIS_TYPES:
+        return jax.make_mesh(
+            shape, axes, axis_types=(AxisType.Auto,) * len(axes)
+        )
+    return jax.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(AxisType.Auto,) * len(axes)
-    )
+    return _make_mesh(shape, axes)
 
 
 def make_host_mesh(n_devices=None, model=1):
     """Small CPU mesh for tests: ("data", "model")."""
     n = n_devices or len(jax.devices())
     assert n % model == 0
-    return jax.make_mesh(
-        (n // model, model), ("data", "model"),
-        axis_types=(AxisType.Auto, AxisType.Auto),
-    )
+    return _make_mesh((n // model, model), ("data", "model"))
 
 
 def agent_axis_for(mesh) -> str:
-    """The mesh axis that carries the LT-ADMM-CC agent ring."""
+    """The mesh axis that carries the LT-ADMM-CC agent graph."""
     return "pod" if "pod" in mesh.axis_names else "data"

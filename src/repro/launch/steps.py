@@ -16,7 +16,7 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core import admm, compression, vr
-from repro.core.topology import Exchange, Ring
+from repro.core.topology import Exchange, make_topology
 from repro.launch import sharding as shd
 from repro.launch.mesh import agent_axis_for
 from repro.models import encdec, transformer as tr
@@ -64,6 +64,11 @@ class TrainRecipe:
     batch_size: int = 4
     compressor: str = "qbit"  # paper Fig.2 default: 8-bit quantizer
     comp_kwargs: tuple = ()
+    # agent graph family — any spec accepted by topology.make_topology
+    # ("ring", "grid2d", "star", "complete", "erdos:p=0.3", ...).  Ring and
+    # grid2d map to single-hop CPs on an ICI torus axis; the others still
+    # lower to one CP per neighbor slot.
+    topology: str = "ring"
     # §Perf: sequentialize the SVRG anchor full-gradient over m_local in
     # this many microbatches (lax.map) — bounds live activation memory at
     # the cost of a scan (1 = single fused pass)
@@ -90,7 +95,7 @@ def build_admm_train(arch_def, cfg, mesh, recipe: TrainRecipe):
     """Returns (step_fn, state_sharding, data_pspec_fn, init_fn, topo)."""
     aaxis = agent_axis_for(mesh)
     n_agents = mesh.shape[aaxis]
-    topo = Ring(n_agents)
+    topo = make_topology(recipe.topology, n_agents)
     exchange = Exchange(topo, axis=aaxis, mesh=mesh)
     acfg = recipe.admm_config()
 

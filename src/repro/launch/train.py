@@ -2,12 +2,14 @@
 
 Runs the paper's algorithm end-to-end on a real model: agents hold
 heterogeneous synthetic data shards, perform tau local SVRG steps per round,
-and exchange compressed x-/z-messages on a ring.  On a single host device the
-ring is simulated (same code path, jnp.roll exchange); on a multi-device mesh
-the exchange is a collective-permute over the agent axis.
+and exchange compressed x-/z-messages over the agent graph selected with
+``--topology`` (ring, grid2d, star, complete, erdos, smallworld).  On a
+single host device the graph is simulated (same code path, gather-by-index
+exchange); on a multi-device mesh the exchange is one collective-permute
+per neighbor slot over the agent axis.
 
     PYTHONPATH=src python -m repro.launch.train --arch qwen3-0.6b --smoke \
-        --agents 4 --rounds 20 --compressor qbit
+        --agents 4 --rounds 20 --compressor qbit --topology complete
 """
 from __future__ import annotations
 
@@ -21,7 +23,7 @@ import jax.numpy as jnp
 from repro.checkpoint import save_checkpoint
 from repro.configs import ARCHS
 from repro.core import admm, vr
-from repro.core.topology import Exchange, Ring
+from repro.core.topology import TOPOLOGIES, Exchange, make_topology
 from repro.data import SyntheticLMDataset
 from repro.launch.steps import TrainRecipe, model_loss, model_specs
 from repro.models.common import init_params, param_count
@@ -35,8 +37,8 @@ def build(args):
             "train.py drives token-LM archs; embed/enc-dec archs are "
             "exercised via the dry-run and tests"
         )
-    topo = Ring(args.agents)
-    ex = Exchange(topo)  # host-simulated ring (see tests/_distributed_check
+    topo = make_topology(args.topology, args.agents)
+    ex = Exchange(topo)  # host-simulated graph (see tests/_distributed_check
     # for the ppermute-backed mesh variant — identical trajectories)
     recipe = TrainRecipe(
         tau=args.tau,
@@ -44,6 +46,7 @@ def build(args):
         beta=args.beta,
         batch_size=args.batch_size,
         compressor=args.compressor,
+        topology=args.topology,
         comp_kwargs=(
             (("bits", args.bits),) if args.compressor == "qbit" else
             (("fraction", args.fraction), ("sampler", "block"))
@@ -63,6 +66,9 @@ def main():
     ap.add_argument("--smoke", action="store_true",
                     help="reduced config (CPU-friendly)")
     ap.add_argument("--agents", type=int, default=4)
+    ap.add_argument("--topology", default="ring",
+                    help=f"agent graph spec, one of {TOPOLOGIES} with "
+                         "optional :k=v,... params (e.g. erdos:p=0.4,seed=1)")
     ap.add_argument("--m-local", type=int, default=8)
     ap.add_argument("--seq-len", type=int, default=64)
     ap.add_argument("--rounds", type=int, default=20)
@@ -89,7 +95,8 @@ def main():
 
     params0 = init_params(jax.random.key(args.seed + 1), model_specs(arch, cfg))
     print(f"# arch={cfg.name} params={param_count(model_specs(arch, cfg)):,} "
-          f"agents={args.agents} tau={acfg.tau} compressor={args.compressor}")
+          f"agents={args.agents} topology={args.topology} tau={acfg.tau} "
+          f"compressor={args.compressor}")
     print(f"# wire bytes/agent/round: "
           f"{admm.wire_bytes_per_round(acfg, topo, params0):,} "
           f"(f32 DDP equivalent: "

@@ -8,8 +8,11 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs.archs import qwen3_smoke
+
+pytestmark = pytest.mark.slow
 from repro.models import transformer as tr
 from repro.models.common import (
     init_params,

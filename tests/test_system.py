@@ -7,10 +7,13 @@ messages on a ring; loss must drop and agents must approach consensus.
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs.archs import qwen3_smoke
 from repro.core import admm, compression, vr
 from repro.core.topology import Exchange, Ring
+
+pytestmark = pytest.mark.slow
 from repro.data import SyntheticLMDataset
 from repro.models import transformer as tr
 from repro.models.common import init_params

@@ -1,0 +1,226 @@
+"""Topology subsystem: structural invariants, exchange round-trips on every
+graph family, host-vs-ppermute equivalence (subprocess), and LT-ADMM-CC
+convergence on non-ring graphs (Theorem 1 holds for any connected graph)."""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import admm, compression, vr, topology as T
+from repro.core.reference import DenseLTADMM
+from repro.problems.logistic import LogisticProblem
+
+TOPOLOGIES = {
+    "ring5": T.Ring(5),
+    "ring2": T.Ring(2),
+    "grid3x4": T.Grid2D(3, 4),
+    "star6": T.Star(6),
+    "complete5": T.Complete(5),
+    "erdos": T.ErdosRenyi(9, p=0.35, seed=2),
+    "smallworld": T.SmallWorld(12, k=4, p=0.2, seed=1),
+}
+
+
+@pytest.mark.parametrize("name", list(TOPOLOGIES))
+def test_structural_invariants(name):
+    """Slot tables are partial permutations, symmetric through the reverse
+    slot, masked slots self-point, and the graph is connected."""
+    T.validate(TOPOLOGIES[name])
+
+
+@pytest.mark.parametrize("name", list(TOPOLOGIES))
+def test_exchange_round_trip(name):
+    """gather_from_neighbors delivers exactly the sender's message on the
+    reverse slot: recv[s][i] == sent[neighbor_table[i, s]], own message on
+    masked slots."""
+    topo = TOPOLOGIES[name]
+    ex = T.Exchange(topo)
+    A = topo.n_agents
+    msgs = jnp.arange(A, dtype=jnp.float32)[:, None] * jnp.ones((A, 3))
+    recv = ex.gather_from_neighbors(msgs)
+    nbr = topo.neighbor_table()
+    for s in range(topo.n_slots):
+        np.testing.assert_array_equal(
+            np.asarray(recv[s][:, 0]), nbr[:, s].astype(np.float32)
+        )
+
+
+@pytest.mark.parametrize("name", list(TOPOLOGIES))
+def test_exchange_edges_round_trip(name):
+    """Edge-directed exchange: the payload agent i addresses to its slot-s
+    neighbor j arrives at j exactly on the slot naming the edge back to i
+    (reverse_slot) — payloads tagged (sender, sender_slot) verify both."""
+    topo = TOPOLOGIES[name]
+    ex = T.Exchange(topo)
+    A, S = topo.n_agents, topo.n_slots
+    sent = tuple(
+        jnp.stack(
+            [jnp.full((2,), float(i * S + s)) for i in range(A)]
+        )
+        for s in range(S)
+    )
+    recv = ex.exchange_edges(sent)
+    nbr, mask = topo.neighbor_table(), topo.slot_mask()
+    for s in range(S):
+        for i in range(A):
+            j, rs = int(nbr[i, s]), topo.reverse_slot[s]
+            want = float(j * S + rs) if mask[i, s] else float(i * S + rs)
+            assert float(recv[s][i, 0]) == want, (name, i, s)
+
+
+def test_metropolis_weights_properties():
+    for name, topo in TOPOLOGIES.items():
+        W = T.metropolis_weights(topo)
+        np.testing.assert_allclose(W, W.T, err_msg=name)
+        np.testing.assert_allclose(W.sum(axis=1), 1.0, atol=1e-12,
+                                   err_msg=name)
+        assert (W >= -1e-12).all(), name
+        # spectral gap > 0 on connected graphs -> gossip mixes
+        ev = np.sort(np.linalg.eigvalsh(W))
+        assert 1.0 - ev[-2] > 1e-3, (name, ev)
+
+
+def test_make_topology_specs():
+    assert isinstance(T.make_topology("ring", 7), T.Ring)
+    g = T.make_topology("grid2d:rows=3", 12)
+    assert (g.rows, g.cols) == (3, 4)
+    assert T.make_topology("complete", 5).degrees().tolist() == [4] * 5
+    e1 = T.make_topology("erdos:p=0.4,seed=3", 8)
+    e2 = T.make_topology("erdos:p=0.4,seed=3", 8)
+    assert e1.edges == e2.edges  # seeded determinism
+    with pytest.raises(ValueError):
+        T.make_topology("hypercube", 8)
+    with pytest.raises(ValueError):  # typo'd param must not run defaults
+        T.make_topology("erdos:prob=0.7", 8)
+
+
+def test_graph_topology_normalizes_edges():
+    """Direct construction (lists, duplicates, reversed pairs) yields the
+    same normalized structure as from_edges."""
+    g = T.GraphTopology(n_agents=4, edges=[(1, 0), (0, 1), (2, 1), (3, 2)])
+    assert g.edges == ((0, 1), (1, 2), (2, 3))
+    assert g.degrees().tolist() == [1, 2, 2, 1]
+    T.validate(g)
+
+
+def test_spmd_exchange_matches_host():
+    """Exchange(axis=None) == ppermute-backed Exchange on an 8-device CPU
+    mesh, for ring AND irregular (masked-slot) topologies.  Subprocess:
+    needs its own XLA_FLAGS device world."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(
+        os.path.dirname(__file__), "..", "src"
+    ) + os.pathsep + env.get("PYTHONPATH", "")
+    script = os.path.join(
+        os.path.dirname(__file__), "_topology_spmd_check.py"
+    )
+    res = subprocess.run(
+        [sys.executable, script],
+        capture_output=True, text=True, env=env, timeout=570,
+    )
+    assert res.returncode == 0, res.stdout + "\n" + res.stderr
+    assert "ALL TOPOLOGY SPMD CHECKS PASSED" in res.stdout
+
+
+# ---------------------------------------------------------------------------
+# LT-ADMM-CC on non-ring graphs
+# ---------------------------------------------------------------------------
+
+
+def _run_admm(topo, prob, data, cfg, est, rounds, x0=None):
+    ex = T.Exchange(topo)
+    if x0 is None:
+        x0 = jnp.zeros((prob.n_agents, prob.n))
+    st = admm.init(cfg, topo, ex, x0)
+    step = jax.jit(lambda st, k: admm.step(cfg, topo, ex, est, st, data, k))
+    for i in range(rounds):
+        st = step(st, jax.random.key(i))
+    return st
+
+
+def test_matches_dense_oracle_irregular_graph():
+    """Identity compressor + full gradients == the plain-Python oracle on a
+    graph with heterogeneous degrees (star: hub d=3, leaves d=1)."""
+    prob = LogisticProblem(n_agents=4)
+    data = prob.make_data(jax.random.key(0))
+    topo = T.Star(4)
+    cfg = admm.LTADMMConfig()
+    est = vr.FullGrad(full_grad=prob.full_grad)
+    x0 = jax.random.normal(jax.random.key(1), (4, prob.n))
+    st = _run_admm(topo, prob, data, cfg, est, 5, x0=x0)
+
+    grads = [
+        (lambda i: (lambda x: prob.full_grad(
+            x, jax.tree.map(lambda t: t[i], data))))(i)
+        for i in range(4)
+    ]
+    oracle = DenseLTADMM(grads, sorted(T.edge_set(topo)))
+    xo, zo = oracle.init(list(x0))
+    for _ in range(5):
+        xo, zo = oracle.step(xo, zo)
+    assert float(jnp.max(jnp.abs(st.x - jnp.stack(xo)))) < 1e-5
+
+
+@pytest.mark.parametrize(
+    "topo_fn,n_agents",
+    [(T.Complete, 3), (T.Star, 4)],
+    ids=["complete3", "star4"],
+)
+def test_exact_convergence_non_ring(topo_fn, n_agents):
+    """Theorem 1 on non-ring graphs: SAGA + 8-bit quantization + EF reach
+    the centralized optimum exactly — same tolerance as the ring test in
+    test_admm.py (||∇F(x̄)||² < 1e-12)."""
+    prob = LogisticProblem(n_agents=n_agents)
+    data = prob.make_data(jax.random.key(0))
+    comp = compression.BBitQuantizer(bits=8)
+    cfg = admm.LTADMMConfig(compressor_x=comp, compressor_z=comp)
+    saga = vr.SagaTable(sample_grad=prob.sample_grad, m=prob.m)
+    st = _run_admm(topo_fn(n_agents), prob, data, cfg, saga, 1500)
+    xbar = jnp.mean(st.x, axis=0)
+    assert float(prob.global_grad_norm_sq(xbar, data)) < 1e-12
+    assert float(admm.consensus_error(st)) < 1e-10
+
+
+def test_masked_slot_state_stays_zero():
+    """Edge state on masked slots is identically zero through training —
+    the invariant that makes the slot-sum in local_phase exact."""
+    prob = LogisticProblem(n_agents=4)
+    data = prob.make_data(jax.random.key(0))
+    topo = T.Star(4)
+    cfg = admm.LTADMMConfig(
+        compressor_x=compression.BBitQuantizer(bits=8),
+        compressor_z=compression.BBitQuantizer(bits=8),
+    )
+    saga = vr.SagaTable(sample_grad=prob.sample_grad, m=prob.m)
+    st = _run_admm(topo, prob, data, cfg, saga, 10)
+    dead = ~topo.slot_mask()
+    for leaf in [st.z, st.s, st.s_tilde]:
+        assert float(jnp.max(jnp.abs(jnp.asarray(leaf)[dead]))) == 0.0
+
+
+def test_costmodel_degree_aware():
+    from repro.core.costmodel import CostModel
+
+    ring = CostModel.for_topology(T.Ring(10))
+    assert ring.mean_degree == 2.0
+    # ring numbers match the paper's Table I exactly
+    assert ring.lt_admm_cc(100, 5) == CostModel().lt_admm_cc(100, 5) == 124.0
+    star = CostModel.for_topology(T.Star(10))  # mean degree 18/10
+    assert star.mean_degree == pytest.approx(1.8)
+    assert star.lt_admm_cc(100, 5) == pytest.approx(104 + 2 * 10 * 0.9)
+    comp = CostModel.for_topology(T.Complete(5))  # mean degree 4
+    assert comp.per_iteration("lead", 100) == pytest.approx(1 + 10 * 2.0)
+
+
+def test_wire_bytes_degree_aware():
+    params = {"w": jnp.zeros((100,))}
+    cfg = admm.LTADMMConfig()  # identity compressors: 400 B each message
+    assert admm.wire_bytes_per_round(cfg, T.Ring(10), params) == 2 * 800
+    # star bottleneck = hub (degree 9); total = 2|E| per-edge payloads
+    assert admm.wire_bytes_per_round(cfg, T.Star(10), params) == 9 * 800
+    assert admm.wire_bytes_total(cfg, T.Star(10), params) == 18 * 800
+    assert admm.wire_bytes_total(cfg, T.Complete(5), params) == 20 * 800
