@@ -3,16 +3,94 @@
 Prints ``name,us_per_call,derived`` CSV rows (us_per_call is blank for
 convergence benchmarks, whose cost is in simulated (t_g, t_c) units).
 Run:  PYTHONPATH=src python -m benchmarks.run
+
+``--perf-smoke OUT.json`` runs a tiny fixed-seed recipe instead and
+writes a machine-readable BENCH JSON (wall time, rounds-to-tolerance,
+wire bytes) — the CI perf-smoke lane uploads it as ``BENCH_PR.json`` so
+the repo accumulates a performance trajectory across PRs.
 """
 from __future__ import annotations
 
+import argparse
+import json
+import platform
 import sys
 import time
 
+PERF_SMOKE_SPECS = ("ring", "drop:p=0.3,base=complete,seed=0")
+PERF_SMOKE_TOL = 1e-8
+PERF_SMOKE_ROUNDS = 600
 
-def main() -> None:
+
+def perf_smoke(out_path: str) -> None:
+    """Fixed-seed small recipe -> BENCH JSON on ``out_path``.
+
+    One static and one time-varying run of the paper-scale convex
+    problem (N = 10, 8-bit quantizer, SAGA).  Wall time is reported
+    twice: cold (includes jit compile) and warm (steady-state scan)."""
+    import jax
+    import numpy as np
+
+    from benchmarks.common import make_problem, run_admm
+    from repro.core import admm, compression, vr
+
+    q8 = compression.BBitQuantizer(bits=8)
+    cfg = admm.LTADMMConfig(compressor_x=q8, compressor_z=q8)
+    results = []
+    for spec in PERF_SMOKE_SPECS:
+        prob, data, graph, ex = make_problem(seed=0, topology=spec)
+        saga = vr.SagaTable(sample_grad=prob.sample_grad, m=prob.m)
+
+        # jit once so the second call measures steady-state runtime, not
+        # re-tracing (run_admm builds a fresh scan closure per call);
+        # data stays a runtime argument so XLA cannot constant-fold the
+        # workload away
+        runner = jax.jit(
+            lambda d: run_admm(prob, d, graph, ex, cfg, saga,
+                               PERF_SMOKE_ROUNDS, metric_every=10)
+        )
+
+        def once():
+            t0 = time.perf_counter()
+            idx, gns = runner(data)
+            jax.block_until_ready(gns)
+            return time.perf_counter() - t0, idx, gns
+
+        cold_s, _, _ = once()
+        warm_s, idx, gns = once()
+        g, i = np.asarray(gns), np.asarray(idx)
+        hit = np.nonzero(g <= PERF_SMOKE_TOL)[0]
+        results.append({
+            "name": f"admm/{graph.name}/q8+saga",
+            "spec": spec,
+            "rounds": PERF_SMOKE_ROUNDS,
+            "cold_wall_s": round(cold_s, 3),
+            "warm_wall_s": round(warm_s, 3),
+            "rounds_to_tol": int(i[hit[0]]) if hit.size else None,
+            "tol": PERF_SMOKE_TOL,
+            "final_gradnorm_sq": float(g[-1]),
+            "wire_bytes_per_round": admm.wire_bytes_per_round(
+                cfg, graph, {"x": np.zeros((prob.n,), np.float32)}
+            ),
+        })
+    payload = {
+        "schema": 1,
+        "bench": "perf-smoke",
+        "seed": 0,
+        "jax": jax.__version__,
+        "python": platform.python_version(),
+        "results": results,
+    }
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    print(json.dumps(payload, indent=2))
+    print(f"# BENCH JSON written to {out_path}", file=sys.stderr)
+
+
+def full_csv() -> None:
     from benchmarks import kernels_bench, paper_fig1, paper_fig2, paper_table1
-    from benchmarks import roofline, topology_sweep
+    from benchmarks import roofline, schedule_sweep, topology_sweep
 
     t0 = time.time()
     print("name,us_per_call,derived")
@@ -21,8 +99,9 @@ def main() -> None:
               f";wire_bytes_per_round={wire}")
     for name, ttt, floor in paper_fig2.run(print_rows=False):
         print(f"{name},,time_to_1e-8={ttt:.0f};floor={floor:.3e}")
-    for name, final, rate, wire, t_round in topology_sweep.run(
-            print_rows=False):
+    sweep_rows = (topology_sweep.run(print_rows=False)
+                  + schedule_sweep.run(print_rows=False))
+    for name, final, rate, wire, t_round in sweep_rows:
         print(f"{name},,final_gradnorm2={final:.3e};rate_per_round={rate:.4f}"
               f";wire_bytes_per_round={wire};t_per_round={t_round:.1f}")
     for name, val in paper_table1.run(print_rows=False):
@@ -33,6 +112,18 @@ def main() -> None:
         print(f"{name},,t_compute_s={t_comp:.4f};dominant={dom}")
     print(f"# total benchmark wall time: {time.time() - t0:.0f}s",
           file=sys.stderr)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--perf-smoke", metavar="OUT_JSON", default=None,
+                    help="run the tiny fixed-seed recipe and write BENCH "
+                         "JSON to this path instead of the full CSV sweep")
+    args = ap.parse_args()
+    if args.perf_smoke:
+        perf_smoke(args.perf_smoke)
+    else:
+        full_csv()
 
 
 if __name__ == "__main__":

@@ -15,11 +15,7 @@ from __future__ import annotations
 
 import argparse
 
-import numpy as np
-
-from benchmarks.common import make_problem, run_admm
-from repro.core import admm, compression, vr
-from repro.core.costmodel import CostModel
+from benchmarks.common import convergence_sweep
 
 DEFAULT_TOPOLOGIES = (
     "ring",
@@ -30,44 +26,9 @@ DEFAULT_TOPOLOGIES = (
 )
 
 
-def linear_rate(idx, gns):
-    """log-linear slope of the pre-floor segment (per round)."""
-    g = np.asarray(gns)
-    i = np.asarray(idx)
-    keep = (g > 1e-14) & (i > 0)
-    if keep.sum() < 3:
-        return float("nan")
-    sl, _ = np.polyfit(i[keep], np.log(g[keep]), 1)
-    return float(sl)
-
-
 def run(topologies=DEFAULT_TOPOLOGIES, rounds=1200, print_rows=True):
-    q8 = compression.BBitQuantizer(bits=8)
-    cfg = admm.LTADMMConfig(compressor_x=q8, compressor_z=q8)
-    rows = []
-    for spec in topologies:
-        prob, data, topo, ex = make_problem(topology=spec)
-        saga = vr.SagaTable(sample_grad=prob.sample_grad, m=prob.m)
-        # metric_every=1: fast-mixing graphs (complete) hit the float32
-        # floor within ~20 rounds, and the rate fit needs the pre-floor
-        # points
-        idx, gns = run_admm(prob, data, topo, ex, cfg, saga, rounds,
-                            metric_every=1)
-        wire = admm.wire_bytes_per_round(
-            cfg, topo, {"x": np.zeros((prob.n,), np.float32)}
-        )
-        # degree-aware (t_g, t_c) cost of one outer round — denser graphs
-        # pay more simulated communication time per round
-        t_round = CostModel.for_topology(topo).lt_admm_cc(prob.m, cfg.tau)
-        rows.append((f"topology/{topo.name}", float(gns[-1]),
-                     linear_rate(idx, gns), wire, t_round))
-    if print_rows:
-        print(f"{'topology':28s} {'final ||grad||^2':>16s} "
-              f"{'rate/round':>11s} {'wire B/round':>13s} {'t/round':>8s}")
-        for name, final, rate, wire, t_round in rows:
-            print(f"{name:28s} {final:16.3e} {rate:11.4f} {wire:13d} "
-                  f"{t_round:8.1f}")
-    return rows
+    return convergence_sweep(topologies, rounds, "topology",
+                             print_rows=print_rows)
 
 
 def main():

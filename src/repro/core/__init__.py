@@ -1,1 +1,4 @@
-from repro.core import admm, baselines, compression, costmodel, reference, topology, vr  # noqa: F401
+from repro.core import (  # noqa: F401
+    admm, baselines, compression, costmodel, reference, schedule, topology,
+    vr,
+)

@@ -95,7 +95,12 @@ def _slot(tree, s):
 
 
 def init(cfg: LTADMMConfig, topo: Topology, exchange: Exchange, x0):
-    """x0: params with leading agent axis [A, ...]."""
+    """x0: params with leading agent axis [A, ...].
+
+    ``topo`` may be a ``schedule.TopologySchedule`` — dispatches to the
+    time-varying state (``init_schedule``)."""
+    if hasattr(topo, "round_mask"):
+        return init_schedule(cfg, topo, exchange, x0)
     zeros_edge = _stack_slots(
         tuple(tree_zeros_like(x0) for _ in range(topo.n_slots))
     )
@@ -131,6 +136,14 @@ def _key_z(round_key, sender, receiver):
 def _key_batch(round_key, agent, t):
     k = jax.random.fold_in(round_key, 7)
     return jax.random.fold_in(jax.random.fold_in(k, agent), t)
+
+
+def _key_xe(round_key, sender, receiver):
+    """Per-edge x-message key (time-varying schedules): over link
+    failures the x error-feedback stream is PER EDGE, so the key folds
+    in both endpoints like a z-message (distinct salt)."""
+    k = jax.random.fold_in(round_key, 17)
+    return jax.random.fold_in(jax.random.fold_in(k, sender), receiver)
 
 
 def _like_per_agent(stacked):
@@ -183,13 +196,28 @@ def local_phase(cfg: LTADMMConfig, topo: Topology, vr_est, x, z, data,
 
 
 def _mask_slot(tree, mask_s):
-    """Zero a per-slot [A, ...] tree where the slot is inactive."""
+    """Zero a per-slot [A, ...] tree where the slot is inactive (static
+    host-numpy masks only; the time-varying path gates with
+    ``_select_slot`` on a traced mask instead)."""
     if bool(np.all(mask_s)):
         return tree
     m = np.asarray(mask_s)
     return tree_map(
         lambda t: jnp.where(m.reshape((m.shape[0],) + (1,) * (t.ndim - 1)),
                             t, 0), tree
+    )
+
+
+def _select_slot(mask_s, on_tree, off_tree):
+    """Per-agent select on a slot tree: agent i takes ``on_tree`` where
+    ``mask_s[i]`` (edge active this round), ``off_tree`` (held state)
+    otherwise."""
+    return tree_map(
+        lambda a, b: jnp.where(
+            jnp.reshape(mask_s, (a.shape[0],) + (1,) * (a.ndim - 1)), a, b
+        ),
+        on_tree,
+        off_tree,
     )
 
 
@@ -211,7 +239,13 @@ def step(
     edge state on them is forced to zero, which makes the slot-sum in
     ``local_phase`` and the stored s/s̃ mirrors exact for heterogeneous
     degrees.
+
+    ``topo`` may be a ``schedule.TopologySchedule`` — dispatches to the
+    time-varying round (``step_schedule``).
     """
+    if hasattr(topo, "round_mask"):
+        return step_schedule(cfg, topo, exchange, vr_est, state, data,
+                             round_key)
     A = topo.n_agents
     agent_ids = jnp.arange(A)
     like = _like_per_agent(state.x)
@@ -323,6 +357,202 @@ def step(
 
 
 # ---------------------------------------------------------------------------
+# Time-varying topologies (schedule.TopologySchedule)
+# ---------------------------------------------------------------------------
+#
+# Asynchronous-ADMM semantics (Wei & Ozdaglar): round k activates the
+# edge subset sched.round_mask(k) of the UNION graph.  On inactive edges
+# both endpoints hold all edge state (z, s, s̃, and the error-feedback
+# mirrors) and ignore the exchanged payloads; the local x-update keeps
+# the union degrees and the full (held) dual sum, so the static
+# union-graph fixed point satisfies every round's update and exact
+# convergence survives under persistent activation.
+#
+# One structural change vs. the static state: over link failures the
+# x-message error-feedback stream desynchronizes if x̂ is per agent (a
+# neighbor that missed a round can never resync, because later deltas
+# are relative to the sender's CURRENT x̂).  The schedule state therefore
+# carries x̂ (and u) PER EDGE — x_hat_edge[:, s] is the sender-side
+# estimate mirrored by the slot-s neighbor — updated only on rounds the
+# edge is active, which both ends agree on (the mask is shared).
+
+
+class LTADMMScheduleState(NamedTuple):
+    x: Any  # [A, ...]
+    x_hat_edge: Any  # [A, S, ...] sender-side per-edge x estimate
+    u_edge: Any  # [A, S, ...] | None (lean)
+    z: Any  # [A, S, ...]
+    s: Any  # [A, S, ...]
+    s_tilde: Any  # [A, S, ...]
+    x_hat_nbr: Any  # [A, S, ...] receiver-side mirror of the neighbor's
+    u_nbr: Any  # [A, S, ...] | None (lean)      x_hat_edge reverse slot
+    k: jax.Array
+
+
+def init_schedule(cfg: LTADMMConfig, sched, exchange: Exchange, x0):
+    """x0: params with leading agent axis [A, ...]; ``sched`` a
+    ``schedule.TopologySchedule`` whose union matches ``exchange.topo``."""
+    topo = sched.union
+    zeros_edge = _stack_slots(
+        tuple(tree_zeros_like(x0) for _ in range(topo.n_slots))
+    )
+    x_edge = _stack_slots(tuple(x0 for _ in range(topo.n_slots)))
+    x_hat_nbr = _stack_slots(exchange.gather_from_neighbors(x0))
+    return LTADMMScheduleState(
+        x=x0,
+        x_hat_edge=x_edge,
+        u_edge=None if cfg.lean else x_edge,
+        z=zeros_edge,
+        s=zeros_edge,
+        s_tilde=zeros_edge,
+        x_hat_nbr=x_hat_nbr,
+        u_nbr=None if cfg.lean else x_hat_nbr,
+        k=jnp.zeros((), jnp.int32),
+    )
+
+
+def step_schedule(
+    cfg: LTADMMConfig,
+    sched,
+    exchange: Exchange,
+    vr_est,
+    state: LTADMMScheduleState,
+    data,
+    round_key,
+):
+    """One outer round of Algorithm 1 over a time-varying topology.
+
+    The compiled program is static: every union slot always moves a
+    payload through the exchange; ``sched.round_mask(state.k)`` (one
+    gather on the periodic mask stack) selects, per agent and slot,
+    whether the advanced state or the held state is kept.
+    """
+    topo = sched.union
+    A = topo.n_agents
+    agent_ids = jnp.arange(A)
+    like = _like_per_agent(state.x)
+    cx, cz = cfg.compressor_x, cfg.compressor_z
+    nbr_table = topo.neighbor_table()
+    mask_k = sched.round_mask(state.k)  # [A, S] traced bool
+    active = [mask_k[:, sl] for sl in range(topo.n_slots)]
+    nbr_ids = [jnp.asarray(nbr_table[:, sl]) for sl in range(topo.n_slots)]
+
+    # ---- 1. local training: union degrees + full held dual sum ------------
+    x_new = local_phase(cfg, topo, vr_est, state.x, state.z, data, round_key)
+
+    # ---- 2-4. per-edge sender-side error feedback for x -------------------
+    m_x, x_hat_edge_new, u_edge_new = [], [], []
+    for sl in range(topo.n_slots):
+        xh_sl = _slot(state.x_hat_edge, sl)
+        u_adv = (
+            xh_sl if cfg.lean
+            else tree_lerp(_slot(state.u_edge, sl), xh_sl, cfg.eta)
+        )
+
+        def compress_xe(aid, nid, delta):
+            kx = _key_xe(round_key, aid, nid)
+            p = compression.compress_tree(cx, kx, delta)
+            rec = compression.decompress_tree(cx, kx, p, like)
+            return p, rec
+
+        p, rec = jax.vmap(compress_xe)(
+            agent_ids, nbr_ids[sl], tree_sub(x_new, u_adv)
+        )
+        xh_adv = tree_map(jnp.add, u_adv, rec)
+        m_x.append(p)
+        x_hat_edge_new.append(_select_slot(active[sl], xh_adv, xh_sl))
+        if not cfg.lean:
+            u_edge_new.append(
+                _select_slot(active[sl], u_adv, _slot(state.u_edge, sl))
+            )
+
+    # ---- 5-6. sender-side error feedback for z (gated below) --------------
+    m_z, z_hat_own = [], []
+    for sl in range(topo.n_slots):
+        def compress_z(aid, nid, delta):
+            kz = _key_z(round_key, aid, nid)
+            p = compression.compress_tree(cz, kz, delta)
+            rec = compression.decompress_tree(cz, kz, p, like)
+            return p, rec
+
+        delta = tree_sub(_slot(state.z, sl), _slot(state.s, sl))
+        p, rec = jax.vmap(compress_z)(agent_ids, nbr_ids[sl], delta)
+        m_z.append(p)
+        z_hat_own.append(tree_map(jnp.add, _slot(state.s, sl), rec))
+
+    # ---- the only cross-agent communication (all slots, every round) ------
+    recv_x = exchange.exchange_edges(tuple(m_x))
+    recv_z = exchange.exchange_edges(tuple(m_z))
+
+    # ---- 7. receiver-side mirrors, gated by the same mask -----------------
+    x_hat_nbr_new, u_nbr_new, z_hat_nbr = [], [], []
+    for sl in range(topo.n_slots):
+        xhn_sl = _slot(state.x_hat_nbr, sl)
+        un_adv = (
+            xhn_sl if cfg.lean
+            else tree_lerp(_slot(state.u_nbr, sl), xhn_sl, cfg.eta)
+        )
+
+        def decomp_xe(sid, rid, payload):
+            return compression.decompress_tree(
+                cx, _key_xe(round_key, sid, rid), payload, like
+            )
+
+        dxr = jax.vmap(decomp_xe)(nbr_ids[sl], agent_ids, recv_x[sl])
+        xhn_adv = tree_map(jnp.add, un_adv, dxr)
+        x_hat_nbr_new.append(_select_slot(active[sl], xhn_adv, xhn_sl))
+        if not cfg.lean:
+            u_nbr_new.append(
+                _select_slot(active[sl], un_adv, _slot(state.u_nbr, sl))
+            )
+
+        def decomp_z(sid, rid, payload):
+            return compression.decompress_tree(
+                cz, _key_z(round_key, sid, rid), payload, like
+            )
+
+        dzr = jax.vmap(decomp_z)(nbr_ids[sl], agent_ids, recv_z[sl])
+        z_hat_nbr.append(
+            tree_map(jnp.add, _slot(state.s_tilde, sl), dzr)
+        )
+
+    # ---- 8. z / s / s̃ updates on active edges only (held elsewhere) ------
+    z_new, s_new, s_tilde_new = [], [], []
+    rrho = cfg.r * cfg.rho
+    for sl in range(topo.n_slots):
+        z_eq4 = tree_map(
+            lambda zo, zn, xn, xh, xhj: 0.5 * (zo - zn)
+            + rrho * xn
+            - rrho * (xh - xhj),
+            z_hat_own[sl],
+            z_hat_nbr[sl],
+            x_new,
+            x_hat_edge_new[sl],
+            x_hat_nbr_new[sl],
+        )
+        z_new.append(_select_slot(active[sl], z_eq4, _slot(state.z, sl)))
+        s_new.append(
+            _select_slot(active[sl], z_hat_own[sl], _slot(state.s, sl))
+        )
+        s_tilde_new.append(
+            _select_slot(active[sl], z_hat_nbr[sl],
+                         _slot(state.s_tilde, sl))
+        )
+
+    return LTADMMScheduleState(
+        x=x_new,
+        x_hat_edge=_stack_slots(tuple(x_hat_edge_new)),
+        u_edge=None if cfg.lean else _stack_slots(tuple(u_edge_new)),
+        z=_stack_slots(tuple(z_new)),
+        s=_stack_slots(tuple(s_new)),
+        s_tilde=_stack_slots(tuple(s_tilde_new)),
+        x_hat_nbr=_stack_slots(tuple(x_hat_nbr_new)),
+        u_nbr=None if cfg.lean else _stack_slots(tuple(u_nbr_new)),
+        k=state.k + 1,
+    )
+
+
+# ---------------------------------------------------------------------------
 # Diagnostics
 # ---------------------------------------------------------------------------
 
@@ -337,19 +567,35 @@ def consensus_error(state: LTADMMState):
     return sum(jax.tree.leaves(sq))
 
 
+def _edge_payload_bytes(cfg: LTADMMConfig, params) -> int:
+    bx = compression.tree_wire_bytes(cfg.compressor_x, params)
+    bz = compression.tree_wire_bytes(cfg.compressor_z, params)
+    return bx + bz
+
+
 def wire_bytes_per_round(cfg: LTADMMConfig, topo: Topology, params) -> int:
     """Bytes the busiest agent transmits per outer round: one x-message to
     every neighbor + one z-message per incident edge (the paper's '2 t_c').
     On non-regular graphs this is the bottleneck (max-degree) agent; see
-    ``wire_bytes_total`` for aggregate traffic."""
-    bx = compression.tree_wire_bytes(cfg.compressor_x, params)
-    bz = compression.tree_wire_bytes(cfg.compressor_z, params)
-    return int(np.max(topo.degrees())) * (bx + bz)
+    ``wire_bytes_total`` for aggregate traffic.
+
+    For a ``TopologySchedule``, ``degrees()`` is the period-mean ACTIVE
+    degree, so only live links are charged (use ``wire_bytes_at`` for an
+    exact single round)."""
+    per_edge = _edge_payload_bytes(cfg, params)
+    return int(round(float(np.max(topo.degrees())) * per_edge))
 
 
 def wire_bytes_total(cfg: LTADMMConfig, topo: Topology, params) -> int:
     """Aggregate bytes on the wire per outer round, summed over agents
-    (= 2 |E| * per-edge payload on any graph)."""
-    bx = compression.tree_wire_bytes(cfg.compressor_x, params)
-    bz = compression.tree_wire_bytes(cfg.compressor_z, params)
-    return int(np.sum(topo.degrees())) * (bx + bz)
+    (= 2 |E| * per-edge payload on any graph; period-mean active edges
+    for a schedule)."""
+    per_edge = _edge_payload_bytes(cfg, params)
+    return int(round(float(np.sum(topo.degrees())) * per_edge))
+
+
+def wire_bytes_at(cfg: LTADMMConfig, sched, params, t: int) -> int:
+    """Exact busiest-agent bytes at round ``t`` of a schedule: only the
+    links active that round carry payloads."""
+    per_edge = _edge_payload_bytes(cfg, params)
+    return int(np.max(sched.round_degrees(t))) * per_edge

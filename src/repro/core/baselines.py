@@ -14,7 +14,9 @@ DSGD and CHOCO-SGD are included as canonical references.  All baselines run
 on stacked ``[A, ...]`` pytrees with the Metropolis–Hastings mixing matrix
 of the SAME ``Topology`` object LT-ADMM-CC runs on, so their communication
 pattern matches LT-ADMM-CC's on every graph family (ring, torus, star,
-complete, random).
+complete, random).  Passing a ``TopologySchedule`` plus the round index
+``k`` to ``step`` runs them over time-varying graphs with per-round
+Metropolis–Hastings weights.
 """
 from __future__ import annotations
 
@@ -26,15 +28,27 @@ import jax.numpy as jnp
 
 from repro.common.trees import tree_map, tree_sub, tree_zeros_like
 from repro.core import compression
+from repro.core.schedule import TopologySchedule, metropolis_schedule
 from repro.core.topology import Topology, metropolis_weights
 
 
-def gossip(topo: Topology, tree):
+def gossip(topo: Topology, tree, k=None):
     """W @ x with the Metropolis–Hastings weights of ``topo`` (stacked
     [A, ...] layout).  W is a compile-time constant [A, A] matrix — fine at
     simulation scale; on a mesh the per-slot Exchange is the wire-efficient
-    path."""
-    W = jnp.asarray(metropolis_weights(topo))
+    path.
+
+    When ``topo`` is a ``TopologySchedule``, round ``k`` (traced int)
+    selects that round's mixing matrix — Metropolis–Hastings weights of
+    the ACTIVE graph, doubly stochastic every round, contractive over a
+    jointly connected period.  The whole periodic stack is a compile-time
+    constant; per round the select is one gather."""
+    if isinstance(topo, TopologySchedule):
+        assert k is not None, "time-varying gossip needs the round index k"
+        Ws = jnp.asarray(metropolis_schedule(topo))
+        W = Ws[jnp.mod(k, topo.period)]
+    else:
+        W = jnp.asarray(metropolis_weights(topo))
 
     def mix(x):
         return jnp.einsum("ij,j...->i...", W, x)
@@ -96,9 +110,9 @@ class DSGD:
     def init(self, x0):
         return {"x": x0}
 
-    def step(self, state, grad_est, data, key):
+    def step(self, state, grad_est, data, key, k=None):
         g = _sample_grads(grad_est, state["x"], data, key, self.batch_size)
-        x = gossip(self.topo, state["x"])
+        x = gossip(self.topo, state["x"], k)
         x = tree_map(lambda a, b: a - self.lr * b, x, g)
         return {"x": x}
 
@@ -120,7 +134,7 @@ class ChocoSGD:
     def init(self, x0):
         return {"x": x0, "xhat": tree_zeros_like(x0)}
 
-    def step(self, state, grad_est, data, key):
+    def step(self, state, grad_est, data, key, k=None):
         x, xhat = state["x"], state["xhat"]
         g = _sample_grads(grad_est, x, data, key, self.batch_size)
         x = tree_map(lambda a, b: a - self.lr * b, x, g)
@@ -129,7 +143,7 @@ class ChocoSGD:
             tree_sub(x, xhat), _like(x),
         )
         xhat = tree_map(jnp.add, xhat, q)
-        mix = tree_sub(gossip(self.topo, xhat), xhat)
+        mix = tree_sub(gossip(self.topo, xhat, k), xhat)
         x = tree_map(lambda a, b: a + self.gossip_lr * b, x, mix)
         return {"x": x, "xhat": xhat}
 
@@ -158,7 +172,7 @@ class LEAD:
             "d": tree_zeros_like(x0),
         }
 
-    def step(self, state, grad_est, data, key):
+    def step(self, state, grad_est, data, key, k=None):
         x, h, d = state["x"], state["h"], state["d"]
         g = _sample_grads(grad_est, x, data, key, self.batch_size)
         y = tree_map(lambda a, b, c: a - self.lr * (b + c), x, g, d)
@@ -167,7 +181,7 @@ class LEAD:
             tree_sub(y, h), _like(x),
         )
         yhat = tree_map(jnp.add, h, q)
-        yhat_w = gossip(self.topo, yhat)
+        yhat_w = gossip(self.topo, yhat, k)
         diff = tree_sub(yhat, yhat_w)
         h = tree_map(lambda a, b: (1 - self.alpha) * a + self.alpha * b,
                      h, yhat)
@@ -199,7 +213,7 @@ class COLD:
             "d": tree_zeros_like(x0),
         }
 
-    def step(self, state, grad_est, data, key):
+    def step(self, state, grad_est, data, key, k=None):
         x, h, d = state["x"], state["h"], state["d"]
         g = _sample_grads(grad_est, x, data, key, self.batch_size)
         y = tree_map(lambda a, b, c: a - self.lr * (b + c), x, g, d)
@@ -208,7 +222,7 @@ class COLD:
             tree_sub(y, h), _like(x),
         )
         yhat = tree_map(jnp.add, h, q)  # innovation state: h <- yhat
-        yhat_w = gossip(self.topo, yhat)
+        yhat_w = gossip(self.topo, yhat, k)
         diff = tree_sub(yhat, yhat_w)
         d = tree_map(
             lambda a, b: a + self.gamma_mix / (2 * self.lr) * b, d, diff
@@ -234,7 +248,7 @@ class CEDAS:
     def init(self, x0):
         return {"x": x0, "psi_prev": x0, "xhat": tree_zeros_like(x0)}
 
-    def step(self, state, grad_est, data, key):
+    def step(self, state, grad_est, data, key, k=None):
         x, psi_prev, xhat = state["x"], state["psi_prev"], state["xhat"]
         g = _sample_grads(grad_est, x, data, key, self.batch_size)
         psi = tree_map(lambda a, b: a - self.lr * b, x, g)
@@ -246,7 +260,7 @@ class CEDAS:
         xhat = tree_map(jnp.add, xhat, q)
         # (I+W)/2 mixing applied through the tracked copies
         half_mix = tree_map(
-            lambda a, b: 0.5 * (a + b), xhat, gossip(self.topo, xhat)
+            lambda a, b: 0.5 * (a + b), xhat, gossip(self.topo, xhat, k)
         )
         x = tree_map(
             lambda mi, hm, xh: mi + self.gossip_lr * (hm - xh),
@@ -274,7 +288,7 @@ class DPDC:
         return {"x": x0, "v": tree_zeros_like(x0),
                 "xhat": tree_zeros_like(x0)}
 
-    def step(self, state, grad_est, data, key):
+    def step(self, state, grad_est, data, key, k=None):
         x, v, xhat = state["x"], state["v"], state["xhat"]
         g = _sample_grads(grad_est, x, data, key, self.batch_size)
         q = _compress_stacked(
@@ -282,7 +296,7 @@ class DPDC:
             tree_sub(x, xhat), _like(x),
         )
         xhat = tree_map(jnp.add, xhat, q)
-        lap = tree_sub(xhat, gossip(self.topo, xhat))  # (I - W) x̂
+        lap = tree_sub(xhat, gossip(self.topo, xhat, k))  # (I - W) x̂
         v_new = tree_map(lambda a, b: a + self.dual_lr * b, v, lap)
         x = tree_map(
             lambda a, gg, vv, ll: a

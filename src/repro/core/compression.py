@@ -92,7 +92,8 @@ class BBitQuantizer:
         scale = jnp.maximum(jnp.max(jnp.abs(xf)), jnp.finfo(jnp.float32).tiny)
         kappa = jax.random.uniform(key, xf.shape)
         q = jnp.floor(self.levels * jnp.abs(xf) / scale + kappa)
-        q = jnp.sign(xf) * q  # in [-levels-? , ...]; |q| <= levels (since |x|/scale <= 1, kappa < 1 -> floor <= levels)
+        # |q| <= levels: |x|/scale <= 1 and kappa < 1 bound the floor
+        q = jnp.sign(xf) * q
         q = q.astype(jnp.int8)
         if self.bits == 4:
             q = _pack4(q)

@@ -28,7 +28,12 @@ class CostModel:
 
     @classmethod
     def for_topology(cls, topo, t_g: float = 1.0, t_c: float = 10.0):
-        """Degree-aware cost model: t_c scales with mean_degree / 2."""
+        """Degree-aware cost model: t_c scales with mean_degree / 2.
+
+        Accepts a ``TopologySchedule`` too: its ``degrees()`` is the
+        period-mean ACTIVE degree per agent, so only live links are
+        charged — a drop:p=0.5 schedule pays half the static graph's
+        communication time per round."""
         return cls(t_g=t_g, t_c=t_c,
                    mean_degree=float(np.mean(topo.degrees())))
 

@@ -1,0 +1,385 @@
+"""Time-varying agent graphs: a schedule of topologies, one per round.
+
+Real deployments see links drop, flap and activate sporadically; the
+ADMM literature covers this regime as *time-varying* or *asynchronous*
+graphs (Makhdoumi & Ozdaglar; Wei & Ozdaglar).  This module layers a
+``TopologySchedule`` over the static ``Topology`` protocol:
+
+Union-slot model
+----------------
+A schedule fixes ONE **union topology** — the superset of every edge
+that is ever active — and a periodic stack of per-round slot masks
+``masks[t] <= union.slot_mask()``.  The SPMD ``collective-permute``
+program is compiled once over the union's slots; a round's mask only
+selects which received messages enter the math, so switching graphs
+costs zero recompilation and the single-compiled-program fast path of
+the static case is preserved.
+
+Algorithm semantics (asynchronous ADMM)
+---------------------------------------
+On an inactive edge both endpoints hold ALL edge state (duals z/s/s̃ and
+the error-feedback mirrors) and skip that edge's update; the local
+x-update keeps using the UNION degrees and the full (held) dual sum.
+This is exactly the edge-asynchronous ADMM of Wei & Ozdaglar: the fixed
+point of the static union-graph run satisfies every round's update, so
+exact convergence (paper Theorem 1) survives — provided every union
+edge is active infinitely often.  Every builder below guarantees this
+*persistent activation* (each union edge active at least once per
+period); ``validate_schedule`` checks it.
+
+Builders / spec strings (see ``make_schedule``):
+
+* ``cycle:ring|star``                — deterministic switching sequence
+* ``drop:p=0.2,base=complete``      — seeded i.i.d. link failures
+* ``gossip:edges=2,base=ring``      — randomized edge activation
+
+``make_graph`` is the ONE spec-parsing entry point for the whole repo
+(launch/train.py, launch/steps.py, benchmarks/*): it returns a static
+``Topology`` or a ``TopologySchedule`` depending on the spec prefix.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.topology import (
+    Exchange,
+    GraphTopology,
+    edge_set,
+    make_topology,
+    metropolis_weights,
+    validate,
+)
+
+
+def _undirected(edges):
+    return {(min(i, j), max(i, j)) for (i, j) in edges}
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class TopologySchedule:
+    """Periodic sequence of graphs over a fixed union topology.
+
+    ``union``: a ``Topology`` whose edge set is the union of every
+    round's edges (its slot structure is the compiled wire program).
+    ``masks``: ``[T, A, S]`` bool, round ``t`` activity per (agent,
+    slot); always a subset of ``union.slot_mask()`` and symmetric per
+    edge (``masks[t, i, s] == masks[t, j, reverse_slot[s]]``).
+    """
+
+    union: Any
+    masks: np.ndarray
+    name: str = "schedule"
+
+    @property
+    def period(self) -> int:
+        return self.masks.shape[0]
+
+    @property
+    def n_agents(self) -> int:
+        return self.union.n_agents
+
+    @property
+    def n_slots(self) -> int:
+        return self.union.n_slots
+
+    # ---- host-side views ---------------------------------------------------
+
+    def round_mask_host(self, t: int) -> np.ndarray:  # [A, S] bool
+        return self.masks[t % self.period]
+
+    def round_degrees(self, t: int) -> np.ndarray:  # [A] int
+        return self.round_mask_host(t).sum(axis=1).astype(np.int64)
+
+    def degrees(self) -> np.ndarray:
+        """Period-mean ACTIVE degree per agent ([A] float) — what the
+        degree-aware cost model and wire accounting charge per round."""
+        return self.masks.sum(axis=2).mean(axis=0)
+
+    def topology_at(self, t: int) -> GraphTopology:
+        """The round-``t`` graph as a standalone ``GraphTopology`` (for
+        per-round gossip weights and host-side checks)."""
+        nbr, m = self.union.neighbor_table(), self.round_mask_host(t)
+        edges = {
+            (min(i, int(nbr[i, s])), max(i, int(nbr[i, s])))
+            for i in range(self.n_agents)
+            for s in range(self.n_slots)
+            if m[i, s]
+        }
+        return GraphTopology.from_edges(
+            self.n_agents, edges, name=f"{self.name}@{t % self.period}"
+        )
+
+    # ---- traced view (static program: one gather on the mask stack) --------
+
+    def round_mask(self, k) -> jnp.ndarray:
+        """[A, S] activity mask for (traced) round index ``k``."""
+        return jnp.asarray(self.masks)[jnp.mod(k, self.period)]
+
+
+def validate_schedule(sched: TopologySchedule) -> None:
+    """Structural invariants on top of ``topology.validate(union)``."""
+    validate(sched.union)
+    um = sched.union.slot_mask()
+    nbr = sched.union.neighbor_table()
+    A, S = sched.n_agents, sched.n_slots
+    assert sched.masks.shape == (sched.period, A, S), sched.masks.shape
+    assert sched.masks.dtype == np.bool_
+    assert not (sched.masks & ~um[None]).any(), (
+        "round mask activates a slot outside the union graph"
+    )
+    for t in range(sched.period):
+        m = sched.masks[t]
+        for i in range(A):
+            for s in range(S):
+                if not m[i, s]:
+                    continue
+                j, rs = int(nbr[i, s]), sched.union.reverse_slot[s]
+                assert m[j, rs], (
+                    f"round {t}: edge ({i},{j}) active at {i} but not {j}"
+                )
+    # persistent activation: every union edge fires at least once per
+    # period (joint connectivity over the period then follows from the
+    # union being connected, which validate() checked above)
+    ever = sched.masks.any(axis=0)
+    assert (ever == um).all(), (
+        "some union edge is never active — joint connectivity violated"
+    )
+
+
+# ---------------------------------------------------------------------------
+# Builders
+# ---------------------------------------------------------------------------
+
+
+def _slot_of_edge(union):
+    """{(i, j) undirected -> (s_i, s_j)}: the slot naming the edge at
+    each endpoint."""
+    nbr, um = union.neighbor_table(), union.slot_mask()
+    out = {}
+    for i in range(union.n_agents):
+        for s in range(union.n_slots):
+            j = int(nbr[i, s])
+            if um[i, s] and i < j:
+                out[(i, j)] = (s, union.reverse_slot[s])
+    return out
+
+
+def _masks_from_edge_rounds(union, round_edges):
+    """[T, A, S] masks from a list of per-round undirected edge sets."""
+    slots = _slot_of_edge(union)
+    masks = np.zeros(
+        (len(round_edges), union.n_agents, union.n_slots), dtype=bool
+    )
+    for t, es in enumerate(round_edges):
+        for (i, j) in _undirected(es):
+            s_i, s_j = slots[(i, j)]
+            masks[t, i, s_i] = masks[t, j, s_j] = True
+    return masks
+
+
+def _force_coverage(round_edges, all_edges, rng):
+    """Persistent activation: any edge absent from every round gets
+    spliced into one seeded-random round."""
+    ever = set().union(*round_edges) if round_edges else set()
+    for e in sorted(all_edges - ever):
+        round_edges[rng.randint(len(round_edges))].add(e)
+    return round_edges
+
+
+def cycle_schedule(topos, name: str = "cycle") -> TopologySchedule:
+    """Deterministic switching sequence: round k uses ``topos[k % T]``.
+
+    The union is the edge-union of all phases (edge-colored slots); each
+    phase graph may be disconnected on its own — joint connectivity over
+    the period is what matters.
+    """
+    topos = list(topos)
+    assert topos, "cycle_schedule needs at least one topology"
+    A = topos[0].n_agents
+    assert all(t.n_agents == A for t in topos), "mixed n_agents in cycle"
+    round_edges = [_undirected(edge_set(t)) for t in topos]
+    union = GraphTopology.from_edges(
+        A, set().union(*round_edges), name=name
+    )
+    return TopologySchedule(
+        union=union,
+        masks=_masks_from_edge_rounds(union, round_edges),
+        name=f"{name}:" + ",".join(getattr(t, "name", "?") for t in topos),
+    )
+
+
+def drop_schedule(base, p: float = 0.2, seed: int = 0,
+                  period: int = 16) -> TopologySchedule:
+    """Seeded i.i.d. link failures over ``base``: each edge drops with
+    probability ``p`` independently per round, cycled with ``period``.
+
+    Keeps the base topology's OWN slot structure (a ring stays two
+    single-hop directional CPs on an ICI axis).  Any edge that the coin
+    flips kill for the whole period is forced back into one random round
+    so activation stays persistent.
+    """
+    assert 0.0 <= p < 1.0, p
+    rng = np.random.RandomState(seed)
+    edges = sorted(_undirected(edge_set(base)))
+    round_edges = [
+        {e for e in edges if rng.rand() >= p} for _ in range(period)
+    ]
+    round_edges = _force_coverage(round_edges, set(edges), rng)
+    return TopologySchedule(
+        union=base,
+        masks=_masks_from_edge_rounds(base, round_edges),
+        name=f"drop{p}:{getattr(base, 'name', '?')}",
+    )
+
+
+def gossip_schedule(base, edges_per_round: int = 2, seed: int = 0,
+                    period: int = 32) -> TopologySchedule:
+    """Randomized gossip / edge activation: each round activates
+    ``edges_per_round`` edges of ``base`` sampled uniformly without
+    replacement (seeded).  Edges never sampled within the period are
+    spliced into a random round (persistent activation)."""
+    rng = np.random.RandomState(seed)
+    edges = sorted(_undirected(edge_set(base)))
+    k = min(edges_per_round, len(edges))
+    round_edges = [
+        {edges[i] for i in rng.choice(len(edges), size=k, replace=False)}
+        for _ in range(period)
+    ]
+    round_edges = _force_coverage(round_edges, set(edges), rng)
+    return TopologySchedule(
+        union=base,
+        masks=_masks_from_edge_rounds(base, round_edges),
+        name=f"gossip{edges_per_round}:{getattr(base, 'name', '?')}",
+    )
+
+
+# ---------------------------------------------------------------------------
+# Spec parsing — the shared entry point for CLIs / recipes / benchmarks
+# ---------------------------------------------------------------------------
+
+SCHEDULES = ("cycle", "drop", "gossip")
+
+
+def _parse_kw(rest: str) -> dict:
+    kw = {}
+    if rest:
+        for item in rest.split(","):
+            k, _, v = item.partition("=")
+            kw[k.strip()] = v.strip()
+    return kw
+
+
+def _base_spec(kw: dict, default: str) -> str:
+    """``base=erdos|p=0.4|seed=1`` -> ``erdos:p=0.4,seed=1`` (pipes keep
+    the nested spec out of the outer comma/colon grammar)."""
+    raw = kw.pop("base", default)
+    name, _, params = raw.partition("|")
+    return name + (":" + params.replace("|", ",") if params else "")
+
+
+def make_schedule(spec: str, n_agents: int) -> TopologySchedule:
+    """Build a schedule from a CLI spec string.
+
+    * ``cycle:ring|star`` — switch between the listed topologies, one
+      per round (sub-specs keep their own params: ``cycle:ring|erdos:p=0.4``).
+    * ``drop:p=0.2,base=complete,seed=0,period=16`` — i.i.d. link
+      failures on any base graph (``base`` uses ``|`` for nested params:
+      ``base=erdos|p=0.4``).
+    * ``gossip:edges=2,base=ring,seed=0,period=32`` — randomized edge
+      activation.
+    """
+    name, _, rest = spec.partition(":")
+    if name == "cycle":
+        if "|" in rest:
+            subs = rest.split("|")
+        else:
+            subs = rest.split(",")
+            if any(":" in s or "=" in s for s in subs):
+                raise ValueError(
+                    f"cycle phases with parameters must be separated by "
+                    f"'|' (commas belong to the sub-spec): got {spec!r}, "
+                    f"e.g. cycle:ring|erdos:p=0.4,seed=1"
+                )
+        subs = [s for s in (x.strip() for x in subs) if s]
+        if not subs:
+            raise ValueError(f"cycle schedule needs phases: {spec!r}")
+        return cycle_schedule(
+            [make_topology(s, n_agents) for s in subs]
+        )
+    if name == "drop":
+        kw = _parse_kw(rest)
+        base = make_topology(_base_spec(kw, "ring"), n_agents)
+        known = {"p", "seed", "period"}
+        if set(kw) - known:
+            raise ValueError(
+                f"drop schedule got unknown params {sorted(set(kw) - known)}"
+            )
+        return drop_schedule(
+            base, p=float(kw.get("p", 0.2)), seed=int(kw.get("seed", 0)),
+            period=int(kw.get("period", 16)),
+        )
+    if name == "gossip":
+        kw = _parse_kw(rest)
+        base = make_topology(_base_spec(kw, "ring"), n_agents)
+        known = {"edges", "seed", "period"}
+        if set(kw) - known:
+            raise ValueError(
+                f"gossip schedule got unknown params {sorted(set(kw) - known)}"
+            )
+        return gossip_schedule(
+            base, edges_per_round=int(kw.get("edges", 2)),
+            seed=int(kw.get("seed", 0)), period=int(kw.get("period", 32)),
+        )
+    raise ValueError(
+        f"unknown schedule {spec!r}; choose from {SCHEDULES}"
+    )
+
+
+def make_graph(spec: str, n_agents: int):
+    """THE spec-parsing helper: static ``Topology`` or
+    ``TopologySchedule`` depending on the spec prefix.  Every CLI /
+    recipe / benchmark routes graph construction through here."""
+    name = spec.partition(":")[0]
+    if name in SCHEDULES:
+        return make_schedule(spec, n_agents)
+    return make_topology(spec, n_agents)
+
+
+def union_topology(graph):
+    """The static topology carrying the wire program: ``graph.union``
+    for a schedule, ``graph`` itself otherwise."""
+    return graph.union if isinstance(graph, TopologySchedule) else graph
+
+
+def build_graph(spec: str, n_agents: int, axis=None, mesh=None):
+    """Graph + its exchange from one spec string — the shared
+    construction path for every CLI / recipe / benchmark.  Returns
+    ``(graph, exchange)``; the exchange runs over the union graph's
+    slots (host gather when ``axis`` is None, one collective-permute per
+    slot on the mesh axis otherwise)."""
+    graph = make_graph(spec, n_agents)
+    return graph, Exchange(union_topology(graph), axis=axis, mesh=mesh)
+
+
+# ---------------------------------------------------------------------------
+# Per-round gossip weights for the baselines
+# ---------------------------------------------------------------------------
+
+
+def metropolis_schedule(sched: TopologySchedule) -> np.ndarray:
+    """[T, A, A] Metropolis–Hastings matrix per round: each round's W is
+    doubly stochastic for THAT round's graph (agents isolated in a round
+    keep their value); joint connectivity makes the period-product
+    contractive.  Cached on the schedule instance (no global retention)."""
+    cached = getattr(sched, "_metropolis_stack", None)
+    if cached is None:
+        cached = np.stack([
+            metropolis_weights(sched.topology_at(t))
+            for t in range(sched.period)
+        ])
+        object.__setattr__(sched, "_metropolis_stack", cached)
+    return cached

@@ -155,7 +155,7 @@ def dryrun_one(arch_id, shape_name, multi_pod, recipe=None, verbose=True,
         data_sds["_max_len"] = shape.seq_len
         cache_sds = abstract_cache(params_sds, data_sds)
         data_sds.pop("_max_len")
-        memory_sds = data_sds.pop("memory", None)
+        data_sds.pop("memory", None)
         cache_ps = shd.cache_pspec(mesh, cache_sds)
         data_ps = {
             k: shd.batch_pspec(mesh, v.shape) if v.shape else P()
@@ -168,7 +168,6 @@ def dryrun_one(arch_id, shape_name, multi_pod, recipe=None, verbose=True,
         )
         fn = jax.jit(serve, in_shardings=in_sh)
         lowered = fn.lower(params_sds, cache_sds, data_sds)
-        del memory_sds
 
     compiled = lowered.compile()
     _mesh_ctx.__exit__(None, None, None)

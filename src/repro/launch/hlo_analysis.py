@@ -141,7 +141,6 @@ def _operand_names(line: str) -> list:
 
 
 def _dot_flops(op: Op, symbols: dict) -> float:
-    res = _shape_bytes(op.result_type)
     # element count of result:
     elems = 0
     for dtype, dims in _SHAPE_RE.findall(op.result_type):

@@ -16,7 +16,6 @@ so every architecture lowers on every mesh without per-arch rules.
 from __future__ import annotations
 
 import math
-from typing import Any
 
 import jax
 from jax.sharding import NamedSharding, PartitionSpec as P

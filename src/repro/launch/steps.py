@@ -9,14 +9,13 @@ exchange runs over the mesh agent axis.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.core import admm, compression, vr
-from repro.core.topology import Exchange, make_topology
+from repro.core.schedule import TopologySchedule, build_graph
 from repro.launch import sharding as shd
 from repro.launch.mesh import agent_axis_for
 from repro.models import encdec, transformer as tr
@@ -64,10 +63,12 @@ class TrainRecipe:
     batch_size: int = 4
     compressor: str = "qbit"  # paper Fig.2 default: 8-bit quantizer
     comp_kwargs: tuple = ()
-    # agent graph family — any spec accepted by topology.make_topology
-    # ("ring", "grid2d", "star", "complete", "erdos:p=0.3", ...).  Ring and
-    # grid2d map to single-hop CPs on an ICI torus axis; the others still
-    # lower to one CP per neighbor slot.
+    # agent graph spec — anything accepted by schedule.make_graph: a static
+    # family ("ring", "grid2d", "star", "complete", "erdos:p=0.3", ...) or a
+    # time-varying schedule ("cycle:ring|star", "drop:p=0.2,base=complete",
+    # "gossip:edges=2,base=ring").  Ring and grid2d map to single-hop CPs on
+    # an ICI torus axis; the others lower to one CP per neighbor slot; a
+    # schedule compiles its union graph's slots once and masks per round.
     topology: str = "ring"
     # §Perf: sequentialize the SVRG anchor full-gradient over m_local in
     # this many microbatches (lax.map) — bounds live activation memory at
@@ -91,12 +92,44 @@ class TrainRecipe:
         )
 
 
+def _admm_state_tree(graph, acfg, x_leaf, edge_leaf, k_leaf):
+    """State-shaped tree (sharding specs or abstract leaves): every
+    per-agent field gets ``x_leaf``, every per-edge field ``edge_leaf``
+    (u fields None in lean mode); picks the schedule state class when
+    ``graph`` is a ``TopologySchedule``."""
+    u_edge = None if acfg.lean else edge_leaf
+    if isinstance(graph, TopologySchedule):
+        return admm.LTADMMScheduleState(
+            x=x_leaf,
+            x_hat_edge=edge_leaf,
+            u_edge=u_edge,
+            z=edge_leaf,
+            s=edge_leaf,
+            s_tilde=edge_leaf,
+            x_hat_nbr=edge_leaf,
+            u_nbr=u_edge,
+            k=k_leaf,
+        )
+    return admm.LTADMMState(
+        x=x_leaf,
+        x_hat=x_leaf,
+        u=None if acfg.lean else x_leaf,
+        z=edge_leaf,
+        s=edge_leaf,
+        s_tilde=edge_leaf,
+        x_hat_nbr=edge_leaf,
+        u_nbr=u_edge,
+        k=k_leaf,
+    )
+
+
 def build_admm_train(arch_def, cfg, mesh, recipe: TrainRecipe):
-    """Returns (step_fn, state_sharding, data_pspec_fn, init_fn, topo)."""
+    """Returns (step_fn, state_sharding, init_fn, graph, acfg); ``graph``
+    is the static ``Topology`` or ``TopologySchedule`` of the recipe."""
     aaxis = agent_axis_for(mesh)
     n_agents = mesh.shape[aaxis]
-    topo = make_topology(recipe.topology, n_agents)
-    exchange = Exchange(topo, axis=aaxis, mesh=mesh)
+    graph, exchange = build_graph(recipe.topology, n_agents,
+                                  axis=aaxis, mesh=mesh)
     acfg = recipe.admm_config()
 
     loss = model_loss(arch_def, cfg)
@@ -118,54 +151,37 @@ def build_admm_train(arch_def, cfg, mesh, recipe: TrainRecipe):
 
     def step_fn(state, data, seed):
         round_key = jax.random.PRNGKey(seed)
-        new_state = admm.step(acfg, topo, exchange, est, state, data, round_key)
+        new_state = admm.step(acfg, graph, exchange, est, state, data,
+                              round_key)
         return new_state
 
     def init_fn(x0_stacked):
-        return admm.init(acfg, topo, exchange, x0_stacked)
+        return admm.init(acfg, graph, exchange, x0_stacked)
 
     # ---- shardings ---------------------------------------------------------
     specs = model_specs(arch_def, cfg)
     pps = shd.param_pspec(mesh, "admm", specs)
     x_ps = shd.prefix_pspec(pps, aaxis)  # [A, ...]
     edge_ps = shd.prefix_pspec(pps, aaxis, None)  # [A, S, ...]
-    state_ps = admm.LTADMMState(
-        x=x_ps,
-        x_hat=x_ps,
-        u=None if acfg.lean else x_ps,
-        z=edge_ps,
-        s=edge_ps,
-        s_tilde=edge_ps,
-        x_hat_nbr=edge_ps,
-        u_nbr=None if acfg.lean else edge_ps,
-        k=P(),
-    )
-    return step_fn, state_ps, init_fn, topo, acfg
+    state_ps = _admm_state_tree(graph, acfg, x_ps, edge_ps, P())
+    return step_fn, state_ps, init_fn, graph, acfg
 
 
-def admm_abstract_state(arch_def, cfg, acfg, topo):
-    """Abstract LTADMMState for lowering (no allocation)."""
+def admm_abstract_state(arch_def, cfg, acfg, graph):
+    """Abstract state for lowering (no allocation) — LTADMMState for a
+    static topology, LTADMMScheduleState for a TopologySchedule."""
     specs = model_specs(arch_def, cfg)
     ap = abstract_params(specs, cfg.dtype)
-    a = topo.n_agents
+    a = graph.n_agents
 
     def lead(extra):
         return jax.tree.map(
             lambda s: jax.ShapeDtypeStruct(extra + s.shape, s.dtype), ap
         )
 
-    x = lead((a,))
-    edge = lead((a, topo.n_slots))
-    return admm.LTADMMState(
-        x=x,
-        x_hat=x,
-        u=None if acfg.lean else x,
-        z=edge,
-        s=edge,
-        s_tilde=edge,
-        x_hat_nbr=edge,
-        u_nbr=None if acfg.lean else edge,
-        k=jax.ShapeDtypeStruct((), jnp.int32),
+    return _admm_state_tree(
+        graph, acfg, lead((a,)), lead((a, graph.n_slots)),
+        jax.ShapeDtypeStruct((), jnp.int32),
     )
 
 
@@ -181,10 +197,10 @@ def build_ddp_train(arch_def, cfg, mesh, lr=1e-3):
 
     def step_fn(params, opt_state, batch, seed):
         del seed
-        l, grads = jax.value_and_grad(loss)(params, batch)
+        loss_val, grads = jax.value_and_grad(loss)(params, batch)
         updates, opt_state = opt.update(grads, opt_state, params)
         params = optimizers.apply_updates(params, updates)
-        return params, opt_state, l
+        return params, opt_state, loss_val
 
     specs = model_specs(arch_def, cfg)
     pps = shd.param_pspec(mesh, "serve", specs)  # TP + FSDP

@@ -3,13 +3,17 @@
 Runs the paper's algorithm end-to-end on a real model: agents hold
 heterogeneous synthetic data shards, perform tau local SVRG steps per round,
 and exchange compressed x-/z-messages over the agent graph selected with
-``--topology`` (ring, grid2d, star, complete, erdos, smallworld).  On a
-single host device the graph is simulated (same code path, gather-by-index
-exchange); on a multi-device mesh the exchange is one collective-permute
-per neighbor slot over the agent axis.
+``--topology`` (ring, grid2d, star, complete, erdos, smallworld) or a
+time-varying ``--topology-schedule`` (cycle:ring|star, drop:p=0.2,...,
+gossip:edges=2,...).  On a single host device the graph is simulated (same
+code path, gather-by-index exchange); on a multi-device mesh the exchange
+is one collective-permute per neighbor slot over the (union) agent axis —
+schedules keep that program static and mask inactive edges per round.
 
     PYTHONPATH=src python -m repro.launch.train --arch qwen3-0.6b --smoke \
         --agents 4 --rounds 20 --compressor qbit --topology complete
+    PYTHONPATH=src python -m repro.launch.train --smoke --agents 4 \
+        --rounds 20 --topology-schedule drop:p=0.25,base=complete
 """
 from __future__ import annotations
 
@@ -23,7 +27,8 @@ import jax.numpy as jnp
 from repro.checkpoint import save_checkpoint
 from repro.configs import ARCHS
 from repro.core import admm, vr
-from repro.core.topology import TOPOLOGIES, Exchange, make_topology
+from repro.core.schedule import SCHEDULES, build_graph
+from repro.core.topology import TOPOLOGIES
 from repro.data import SyntheticLMDataset
 from repro.launch.steps import TrainRecipe, model_loss, model_specs
 from repro.models.common import init_params, param_count
@@ -37,16 +42,19 @@ def build(args):
             "train.py drives token-LM archs; embed/enc-dec archs are "
             "exercised via the dry-run and tests"
         )
-    topo = make_topology(args.topology, args.agents)
-    ex = Exchange(topo)  # host-simulated graph (see tests/_distributed_check
-    # for the ppermute-backed mesh variant — identical trajectories)
+    spec = args.topology_schedule or args.topology
+    # Topology or TopologySchedule + host-simulated exchange (see
+    # tests/_distributed_check for the ppermute-backed mesh variant —
+    # identical trajectories); a schedule compiles the union graph's
+    # wire program once, per-round masks select the active edges
+    graph, ex = build_graph(spec, args.agents)
     recipe = TrainRecipe(
         tau=args.tau,
         gamma=args.gamma,
         beta=args.beta,
         batch_size=args.batch_size,
         compressor=args.compressor,
-        topology=args.topology,
+        topology=spec,
         comp_kwargs=(
             (("bits", args.bits),) if args.compressor == "qbit" else
             (("fraction", args.fraction), ("sampler", "block"))
@@ -57,7 +65,7 @@ def build(args):
     loss = model_loss(arch, cfg)
     grad = jax.grad(loss)
     est = vr.SvrgAnchor(batch_grad=grad, full_grad=grad)
-    return arch, cfg, topo, ex, acfg, est, loss
+    return arch, cfg, graph, ex, acfg, est, loss
 
 
 def main():
@@ -69,6 +77,11 @@ def main():
     ap.add_argument("--topology", default="ring",
                     help=f"agent graph spec, one of {TOPOLOGIES} with "
                          "optional :k=v,... params (e.g. erdos:p=0.4,seed=1)")
+    ap.add_argument("--topology-schedule", default=None,
+                    help="time-varying graph spec, one of "
+                         f"{SCHEDULES} — e.g. cycle:ring|star, "
+                         "drop:p=0.2,base=complete, "
+                         "gossip:edges=2,base=ring; overrides --topology")
     ap.add_argument("--m-local", type=int, default=8)
     ap.add_argument("--seq-len", type=int, default=64)
     ap.add_argument("--rounds", type=int, default=20)
@@ -86,7 +99,7 @@ def main():
     ap.add_argument("--log-every", type=int, default=1)
     args = ap.parse_args()
 
-    arch, cfg, topo, ex, acfg, est, loss = build(args)
+    arch, cfg, graph, ex, acfg, est, loss = build(args)
     ds = SyntheticLMDataset(
         vocab=cfg.vocab, seq_len=args.seq_len, n_agents=args.agents,
         m_local=args.m_local, heterogeneity=args.heterogeneity,
@@ -95,10 +108,11 @@ def main():
 
     params0 = init_params(jax.random.key(args.seed + 1), model_specs(arch, cfg))
     print(f"# arch={cfg.name} params={param_count(model_specs(arch, cfg)):,} "
-          f"agents={args.agents} topology={args.topology} tau={acfg.tau} "
-          f"compressor={args.compressor}")
+          f"agents={args.agents} "
+          f"topology={args.topology_schedule or args.topology} "
+          f"tau={acfg.tau} compressor={args.compressor}")
     print(f"# wire bytes/agent/round: "
-          f"{admm.wire_bytes_per_round(acfg, topo, params0):,} "
+          f"{admm.wire_bytes_per_round(acfg, graph, params0):,} "
           f"(f32 DDP equivalent: "
           f"{2 * acfg.tau * sum(x.nbytes for x in jax.tree.leaves(params0)):,})")
 
@@ -106,8 +120,8 @@ def main():
         lambda t: jnp.broadcast_to(t[None], (args.agents,) + t.shape).copy(),
         params0,
     )
-    state = admm.init(acfg, topo, ex, x0)
-    step = jax.jit(lambda s, k: admm.step(acfg, topo, ex, est, s, data, k))
+    state = admm.init(acfg, graph, ex, x0)
+    step = jax.jit(lambda s, k: admm.step(acfg, graph, ex, est, s, data, k))
 
     def mean_loss(state):
         pbar = jax.tree.map(lambda t: jnp.mean(t, axis=0), state.x)

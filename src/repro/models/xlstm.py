@@ -236,7 +236,6 @@ def slstm_init_cache(cfg: XLSTMConfig, batch: int, dtype):
 
 def _slstm_cell(params, cfg: XLSTMConfig, state, wx_t):
     """One recurrence step.  wx_t [B, 4*di] (input contribution)."""
-    b = wx_t.shape[0]
     nh, dh = cfg.n_heads, cfg.head_dim
     rec = jnp.einsum("bhk,hkl->bhl", state["h"], params["r"])  # [b,nh,4dh]
     raw = wx_t + rec + params["b"]

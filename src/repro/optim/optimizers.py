@@ -11,7 +11,6 @@ training).
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import NamedTuple, Any
 
 import jax

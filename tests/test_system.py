@@ -80,11 +80,11 @@ def test_ddp_reference_trains_lm():
 
     @jax.jit
     def ddp_step(params, opt_state, batch):
-        l, g = jax.value_and_grad(
+        loss_val, g = jax.value_and_grad(
             lambda p: tr.loss_fn(p, cfg, {"tokens": batch})
         )(params)
         upd, opt_state = opt.update(g, opt_state, params)
-        return optimizers.apply_updates(params, upd), opt_state, l
+        return optimizers.apply_updates(params, upd), opt_state, loss_val
 
     losses = []
     for i in range(12):
