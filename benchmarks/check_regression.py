@@ -1,0 +1,114 @@
+"""Perf-smoke regression gate: compare a fresh BENCH JSON against the
+committed baseline artifact.
+
+    PYTHONPATH=src python -m benchmarks.check_regression \
+        BENCH_PR.json benchmarks/BENCH_BASELINE.json
+
+The CI perf-smoke lane fails when, versus ``BENCH_BASELINE.json``
+(fixed-seed, committed at the repo root of the lane):
+
+* ``rounds_to_tol`` regresses by more than ROUNDS_SLACK (convergence got
+  slower — an algorithmic regression; the run is fully seeded, so this
+  is near-deterministic up to cross-version float jitter), or the run no
+  longer reaches tolerance at all;
+* ``warm_wall_s`` exceeds WALL_SLACK x baseline (steady-state runtime
+  blow-up; the slack absorbs runner-hardware variance);
+* ``final_gradnorm_sq`` worsens by more than FLOOR_SLACK x (the
+  convergence floor rose by orders of magnitude).
+
+After an INTENDED perf/algorithm change, refresh the artifact:
+``python -m benchmarks.run --perf-smoke benchmarks/BENCH_BASELINE.json``
+and commit it — that is the point: the baseline file IS the repo's
+recorded perf trajectory.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+ROUNDS_SLACK = 1.25  # rounds_to_tol may grow <= 25%
+WALL_SLACK = 3.0  # warm wall time may grow <= 3x (hardware variance)
+FLOOR_SLACK = 100.0  # final gradnorm may grow <= 100x (both at f32 floor)
+
+
+def check(pr: dict, base: dict) -> list[str]:
+    failures = []
+    base_by_name = {r["name"]: r for r in base["results"]}
+    for r in pr["results"]:
+        b = base_by_name.pop(r["name"], None)
+        if b is None:
+            continue  # new benchmark: no baseline yet, nothing to gate
+        name = r["name"]
+        if b["rounds_to_tol"] is not None:
+            if r["rounds_to_tol"] is None:
+                failures.append(
+                    f"{name}: no longer reaches tol={b['tol']} "
+                    f"(baseline: {b['rounds_to_tol']} rounds; final "
+                    f"gradnorm {r['final_gradnorm_sq']:.2e})"
+                )
+            elif r["rounds_to_tol"] > ROUNDS_SLACK * b["rounds_to_tol"]:
+                failures.append(
+                    f"{name}: rounds_to_tol {b['rounds_to_tol']} -> "
+                    f"{r['rounds_to_tol']} (> {ROUNDS_SLACK}x)"
+                )
+        if r["warm_wall_s"] > WALL_SLACK * b["warm_wall_s"]:
+            failures.append(
+                f"{name}: warm_wall_s {b['warm_wall_s']} -> "
+                f"{r['warm_wall_s']} (> {WALL_SLACK}x)"
+            )
+        if r["final_gradnorm_sq"] > FLOOR_SLACK * b["final_gradnorm_sq"]:
+            failures.append(
+                f"{name}: final_gradnorm_sq {b['final_gradnorm_sq']:.2e} "
+                f"-> {r['final_gradnorm_sq']:.2e} (> {FLOOR_SLACK}x)"
+            )
+    for name in base_by_name:
+        failures.append(f"{name}: present in baseline but missing from PR "
+                        f"run (benchmark silently dropped?)")
+    return failures
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("pr_json", help="fresh perf-smoke output")
+    ap.add_argument("baseline_json", help="committed BENCH_BASELINE.json")
+    args = ap.parse_args()
+    with open(args.pr_json) as f:
+        pr = json.load(f)
+    with open(args.baseline_json) as f:
+        base = json.load(f)
+
+    if pr.get("jax") != base.get("jax"):
+        # seeded trajectories are stable across jax versions in practice,
+        # but float/PRNG details are not contractual — make a red lane
+        # diagnosable at a glance
+        print(f"WARNING: jax version differs from baseline "
+              f"({base.get('jax')} -> {pr.get('jax')}); a threshold "
+              f"breach below may be version skew, not a code regression "
+              f"— if so, refresh benchmarks/BENCH_BASELINE.json",
+              file=sys.stderr)
+
+    print(f"{'benchmark':38s} {'rounds_to_tol':>16s} {'warm_wall_s':>14s} "
+          f"{'floor':>10s}")
+    base_by_name = {r["name"]: r for r in base["results"]}
+    for r in pr["results"]:
+        b = base_by_name.get(r["name"], {})
+        print(f"{r['name']:38s} "
+              f"{b.get('rounds_to_tol')!s:>7s}->{r['rounds_to_tol']!s:<7s} "
+              f"{b.get('warm_wall_s')!s:>6s}->{r['warm_wall_s']!s:<6s} "
+              f"{r['final_gradnorm_sq']:10.1e}")
+
+    failures = check(pr, base)
+    if failures:
+        print("\nPERF REGRESSION vs committed baseline:", file=sys.stderr)
+        for msg in failures:
+            print(f"  FAIL {msg}", file=sys.stderr)
+        print("(intended change? refresh with `python -m benchmarks.run "
+              "--perf-smoke benchmarks/BENCH_BASELINE.json` and commit)",
+              file=sys.stderr)
+        raise SystemExit(1)
+    print("\nperf-smoke within thresholds of committed baseline")
+
+
+if __name__ == "__main__":
+    main()

@@ -7,9 +7,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import admm, compression, vr
+from repro.core import vr
 from repro.core.costmodel import CostModel
 from repro.core.schedule import build_graph
+from repro.core.solver import make_solver
 from repro.problems.logistic import LogisticProblem
 
 
@@ -42,23 +43,22 @@ def convergence_sweep(specs, rounds, label, print_rows=True):
     or schedules): N = 10 agents, 8-bit quantizer, SAGA.  Returns rows
     ``(name, final_gradnorm_sq, rate_per_round, wire_bytes, t_round)``
     — the shared engine of topology_sweep.py and schedule_sweep.py."""
-    q8 = compression.BBitQuantizer(bits=8)
-    cfg = admm.LTADMMConfig(compressor_x=q8, compressor_z=q8)
     rows = []
     for spec in specs:
         prob, data, graph, ex = make_problem(topology=spec)
         saga = vr.SagaTable(sample_grad=prob.sample_grad, m=prob.m)
+        solver = make_solver("ltadmm:compressor=qbit:bits=8", graph, ex,
+                             saga)
         # metric_every=1: fast-mixing graphs (complete) hit the float32
         # floor within ~20 rounds, and the rate fit needs the pre-floor
         # points
-        idx, gns = run_admm(prob, data, graph, ex, cfg, saga, rounds,
-                            metric_every=1)
-        wire = admm.wire_bytes_per_round(
-            cfg, graph, {"x": np.zeros((prob.n,), np.float32)}
-        )
+        idx, gns = run_solver(prob, data, solver, rounds, metric_every=1)
+        wire = solver.wire_bytes({"x": np.zeros((prob.n,), np.float32)})
         # degree-aware (t_g, t_c) cost of one outer round — denser (or
         # more active) graphs pay more simulated communication per round
-        t_round = CostModel.for_topology(graph).lt_admm_cc(prob.m, cfg.tau)
+        t_round = CostModel.for_topology(graph).lt_admm_cc(
+            prob.m, solver.cfg.tau
+        )
         rows.append((f"{label}/{graph.name}", float(gns[-1]),
                      linear_rate(idx, gns), wire, t_round))
     if print_rows:
@@ -70,14 +70,15 @@ def convergence_sweep(specs, rounds, label, print_rows=True):
     return rows
 
 
-def run_admm(prob, data, topo, ex, cfg, est, rounds, metric_every=10):
-    """Scan-driven run; returns (rounds_idx, gradnorm_sq) arrays."""
-    st = admm.init(cfg, topo, ex, jnp.zeros((topo.n_agents, prob.n)))
+def run_solver(prob, data, solver, rounds, metric_every=10, seed=12345):
+    """Scan-driven run of ANY ``Solver``; returns (rounds_idx,
+    gradnorm_sq) arrays sampled every ``metric_every`` rounds."""
+    st = solver.init(jnp.zeros((prob.n_agents, prob.n)))
+    base = jax.random.key(seed)
 
     def body(st, i):
-        st = admm.step(cfg, topo, ex, est, st, data, jax.random.fold_in(
-            jax.random.key(12345), i))
-        xbar = jnp.mean(st.x, axis=0)
+        st = solver.step(st, data, jax.random.fold_in(base, i))
+        xbar = jnp.mean(solver.consensus_params(st), axis=0)
         gn = prob.global_grad_norm_sq(xbar, data)
         return st, gn
 

@@ -4,25 +4,28 @@ Reproduces the claim: exact (machine-precision) linear convergence of
 ||∇F(x̄_k)||² for both the b-bit quantizer (C1) and rand-k (C2), with
 compressor-dependent rate.  Paper settings: ring N=10, n=5, m=100, |B|=1,
 tau=5, rho=0.1, beta=0.2, gamma=0.3, r=1.
+
+Every variant is one registry spec string — the compressor (and the EF
+rate eta it needs) ride inside the solver spec.
 """
 from __future__ import annotations
 
-import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import make_problem, run_admm
-from repro.core import admm, compression, vr
+from benchmarks.common import make_problem, run_solver
+from repro.core import vr
+from repro.core.solver import make_solver
 
 ROUNDS = 1500
 
-
-def compressors():
-    return {
-        "q8": (compression.BBitQuantizer(bits=8), 1.0),
-        "q4": (compression.BBitQuantizer(bits=4), 1.0),
-        "randk_k3": (compression.RandK(fraction=0.6), 0.5),
-        "identity": (compression.Identity(), 1.0),
-    }
+# name -> ltadmm solver spec (nested compressor spec; randk needs the
+# smaller EF rate eta = 0.5, cf. Theorem 1's step-size conditions)
+SPECS = {
+    "q8": "ltadmm:compressor=qbit:bits=8",
+    "q4": "ltadmm:compressor=qbit:bits=4",
+    "randk_k3": "ltadmm:eta=0.5,compressor=randk:fraction=0.6",
+    "identity": "ltadmm:compressor=identity",
+}
 
 
 def linear_rate(idx, gns):
@@ -41,17 +44,12 @@ def run(print_rows=True):
     prob, data, topo, ex = make_problem()
     saga = vr.SagaTable(sample_grad=prob.sample_grad, m=prob.m)
     rows = []
-    for name, (comp, eta) in compressors().items():
-        cfg = admm.LTADMMConfig(
-            eta=eta, compressor_x=comp, compressor_z=comp
-        )
-        idx, gns = run_admm(prob, data, topo, ex, cfg, saga, ROUNDS,
-                            metric_every=50)
+    for name, spec in SPECS.items():
+        solver = make_solver(spec, topo, ex, saga)
+        idx, gns = run_solver(prob, data, solver, ROUNDS, metric_every=50)
         final = float(gns[-1])
         rate = linear_rate(idx, gns)
-        wire = admm.wire_bytes_per_round(
-            cfg, topo, jnp.zeros((prob.n,))
-        )
+        wire = solver.wire_bytes(np.zeros((prob.n,), np.float32))
         rows.append((f"fig1/{name}", final, rate, wire))
         if print_rows:
             traj = " ".join(

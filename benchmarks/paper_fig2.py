@@ -5,34 +5,43 @@ Reported per algorithm: simulated time to reach ||∇F(x̄)||² <= 1e-8, and the
 floor reached — LT-ADMM-CC should be the only stochastic-gradient method to
 reach the threshold (exact convergence via VR + EF), and faster than the
 full-gradient variants of COLD/DPDC in time units.
+
+Every method is one ``make_solver`` registry spec string plus a gradient
+estimator kind — no baseline class is instantiated by hand.
 """
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import make_problem, run_admm
-from repro.core import admm, baselines, compression, vr
+from benchmarks.common import make_problem, run_solver
+from repro.core import vr
 from repro.core.costmodel import CostModel
+from repro.core.solver import make_solver
 
 THRESHOLD = 1e-8
 TAU = 5
 ADMM_ROUNDS = 1200
 BASELINE_ITERS = TAU * ADMM_ROUNDS  # same local-iteration budget
 
+# method -> (solver spec, estimator kind).  "saga"/"full" converge
+# exactly; "sgd" is the stochastic regime where only LT-ADMM-CC does.
+METHODS = {
+    "lt-admm-cc": (f"ltadmm:tau={TAU},compressor=qbit:bits=8", "saga"),
+    "lead+sgd": ("lead:lr=0.1,compressor=qbit:bits=8", "sgd"),
+    "cedas+sgd": ("cedas:lr=0.1,compressor=qbit:bits=8", "sgd"),
+    "cold+sgd": ("cold:lr=0.1,compressor=qbit:bits=8", "sgd"),
+    "dpdc+sgd": ("dpdc:lr=0.1,compressor=qbit:bits=8", "sgd"),
+    "cold+full": ("cold:lr=0.1,compressor=qbit:bits=8", "full"),
+    "dpdc+full": ("dpdc:lr=0.1,compressor=qbit:bits=8", "full"),
+}
 
-def _run_baseline(prob, data, algo, est, iters, metric_every=50):
-    st = algo.init(jnp.zeros((prob.n_agents, prob.n)))
 
-    def body(st, i):
-        st = algo.step(st, est, data, jax.random.fold_in(
-            jax.random.key(999), i))
-        xbar = jnp.mean(st["x"], axis=0)
-        return st, prob.global_grad_norm_sq(xbar, data)
-
-    _, gns = jax.lax.scan(body, st, jnp.arange(iters))
-    return jnp.arange(iters)[::metric_every], gns[::metric_every]
+def _estimator(kind, prob):
+    if kind == "saga":
+        return vr.SagaTable(sample_grad=prob.sample_grad, m=prob.m)
+    if kind == "full":
+        return vr.FullGrad(full_grad=prob.full_grad)
+    return vr.PlainSgd(batch_grad=prob.batch_grad)
 
 
 def time_to_threshold(times, gns, thr=THRESHOLD):
@@ -45,38 +54,21 @@ def time_to_threshold(times, gns, thr=THRESHOLD):
 def run(print_rows=True):
     prob, data, topo, ex = make_problem()
     cm = CostModel(t_g=1.0, t_c=10.0)
-    q8 = compression.BBitQuantizer(bits=8)
-    saga = vr.SagaTable(sample_grad=prob.sample_grad, m=prob.m)
-    sgd = vr.PlainSgd(batch_grad=prob.batch_grad)
-    full = vr.FullGrad(full_grad=prob.full_grad)
     rows = []
-
-    # ---- LT-ADMM-CC ------------------------------------------------------
-    cfg = admm.LTADMMConfig(compressor_x=q8, compressor_z=q8, tau=TAU)
-    idx, gns = run_admm(prob, data, topo, ex, cfg, saga, ADMM_ROUNDS,
-                        metric_every=10)
-    t_per_round = cm.lt_admm_cc(prob.m, TAU)
-    times = np.asarray(idx) * t_per_round
-    rows.append(("fig2/lt-admm-cc", time_to_threshold(times, gns),
-                 float(gns[-1])))
-
-    # ---- baselines ---------------------------------------------------------
-    algos = {
-        "lead+sgd": (baselines.LEAD(topo, lr=0.1, compressor=q8), sgd,
-                     cm.per_iteration("lead", prob.m)),
-        "cedas+sgd": (baselines.CEDAS(topo, lr=0.1, compressor=q8), sgd,
-                      cm.per_iteration("cedas", prob.m)),
-        "cold+sgd": (baselines.COLD(topo, lr=0.1, compressor=q8), sgd,
-                     cm.per_iteration("cold", prob.m)),
-        "dpdc+sgd": (baselines.DPDC(topo, lr=0.1, compressor=q8), sgd,
-                     cm.per_iteration("dpdc", prob.m)),
-        "cold+full": (baselines.COLD(topo, lr=0.1, compressor=q8), full,
-                      cm.per_iteration("cold", prob.m, full_grad=True)),
-        "dpdc+full": (baselines.DPDC(topo, lr=0.1, compressor=q8), full,
-                      cm.per_iteration("dpdc", prob.m, full_grad=True)),
-    }
-    for name, (algo, est, t_iter) in algos.items():
-        idx, gns = _run_baseline(prob, data, algo, est, BASELINE_ITERS)
+    for name, (spec, est_kind) in METHODS.items():
+        solver = make_solver(spec, topo, ex, _estimator(est_kind, prob))
+        if solver.name == "ltadmm":
+            rounds, metric_every = ADMM_ROUNDS, 10
+            t_iter = cm.lt_admm_cc(prob.m, solver.cfg.tau)
+            seed = 12345
+        else:
+            rounds, metric_every = BASELINE_ITERS, 50
+            t_iter = cm.per_iteration(
+                solver.name, prob.m, full_grad=(est_kind == "full")
+            )
+            seed = 999
+        idx, gns = run_solver(prob, data, solver, rounds,
+                              metric_every=metric_every, seed=seed)
         times = np.asarray(idx) * t_iter
         rows.append((f"fig2/{name}", time_to_threshold(times, gns),
                      float(gns[-1])))

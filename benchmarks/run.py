@@ -31,23 +31,24 @@ def perf_smoke(out_path: str) -> None:
     import jax
     import numpy as np
 
-    from benchmarks.common import make_problem, run_admm
-    from repro.core import admm, compression, vr
+    from benchmarks.common import make_problem, run_solver
+    from repro.core import vr
+    from repro.core.solver import make_solver
 
-    q8 = compression.BBitQuantizer(bits=8)
-    cfg = admm.LTADMMConfig(compressor_x=q8, compressor_z=q8)
     results = []
     for spec in PERF_SMOKE_SPECS:
         prob, data, graph, ex = make_problem(seed=0, topology=spec)
         saga = vr.SagaTable(sample_grad=prob.sample_grad, m=prob.m)
+        solver = make_solver("ltadmm:compressor=qbit:bits=8", graph, ex,
+                             saga)
 
         # jit once so the second call measures steady-state runtime, not
-        # re-tracing (run_admm builds a fresh scan closure per call);
+        # re-tracing (run_solver builds a fresh scan closure per call);
         # data stays a runtime argument so XLA cannot constant-fold the
         # workload away
         runner = jax.jit(
-            lambda d: run_admm(prob, d, graph, ex, cfg, saga,
-                               PERF_SMOKE_ROUNDS, metric_every=10)
+            lambda d: run_solver(prob, d, solver, PERF_SMOKE_ROUNDS,
+                                 metric_every=10)
         )
 
         def once():
@@ -69,8 +70,8 @@ def perf_smoke(out_path: str) -> None:
             "rounds_to_tol": int(i[hit[0]]) if hit.size else None,
             "tol": PERF_SMOKE_TOL,
             "final_gradnorm_sq": float(g[-1]),
-            "wire_bytes_per_round": admm.wire_bytes_per_round(
-                cfg, graph, {"x": np.zeros((prob.n,), np.float32)}
+            "wire_bytes_per_round": solver.wire_bytes(
+                {"x": np.zeros((prob.n,), np.float32)}
             ),
         })
     payload = {

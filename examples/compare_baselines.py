@@ -1,12 +1,20 @@
 """Fig.-2-style comparison: LT-ADMM-CC vs LEAD/CEDAS/COLD/DPDC under the
 paper's time model (t_c = 10 t_g, 8-bit quantizer, |B| = 1).
 
+Every method is constructed from a ``core.solver.make_solver`` registry
+spec string (see ``benchmarks.paper_fig2.METHODS``) — adding a method to
+the comparison is one spec-string entry, not a new code path.
+
     PYTHONPATH=src:. python examples/compare_baselines.py
 """
 from benchmarks import paper_fig2
 
 
 def main():
+    print("methods (solver registry spec strings):")
+    for name, (spec, est) in paper_fig2.METHODS.items():
+        print(f"  {name:12s} make_solver({spec!r}) + {est} gradients")
+    print()
     rows = paper_fig2.run(print_rows=False)
     print(f"{'algorithm':20s} {'sim. time to 1e-8':>18s} {'floor':>12s}")
     for name, ttt, floor in rows:

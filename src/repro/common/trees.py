@@ -88,3 +88,17 @@ def tree_broadcast_leading(tree, n):
 def tree_all_finite(a):
     leaves = [jnp.all(jnp.isfinite(x)) for x in jax.tree.leaves(a)]
     return jnp.all(jnp.stack(leaves))
+
+
+def tree_consensus_mean(params):
+    """Mean over the leading agent axis of stacked [A, ...] params."""
+    return jax.tree.map(lambda x: jnp.mean(x, axis=0), params)
+
+
+def tree_consensus_error(params):
+    """Total squared deviation from the agent mean (consensus residual)."""
+    xbar = tree_consensus_mean(params)
+    sq = jax.tree.map(
+        lambda x, b: jnp.sum((x - b[None]) ** 2), params, xbar
+    )
+    return sum(jax.tree.leaves(sq))

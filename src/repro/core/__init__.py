@@ -1,4 +1,4 @@
 from repro.core import (  # noqa: F401
-    admm, baselines, compression, costmodel, reference, schedule, topology,
-    vr,
+    admm, baselines, compression, costmodel, reference, schedule, solver,
+    topology, vr,
 )

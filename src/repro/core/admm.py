@@ -50,7 +50,14 @@ import jax.numpy as jnp
 
 import numpy as np
 
-from repro.common.trees import tree_lerp, tree_map, tree_sub, tree_zeros_like
+from repro.common.trees import (
+    tree_consensus_error,
+    tree_consensus_mean,
+    tree_lerp,
+    tree_map,
+    tree_sub,
+    tree_zeros_like,
+)
 from repro.core import compression
 from repro.core.topology import Exchange, Topology
 
@@ -558,13 +565,11 @@ def step_schedule(
 
 
 def consensus_mean(state: LTADMMState):
-    return tree_map(lambda x: jnp.mean(x, axis=0), state.x)
+    return tree_consensus_mean(state.x)
 
 
 def consensus_error(state: LTADMMState):
-    xbar = consensus_mean(state)
-    sq = tree_map(lambda x, b: jnp.sum((x - b[None]) ** 2), state.x, xbar)
-    return sum(jax.tree.leaves(sq))
+    return tree_consensus_error(state.x)
 
 
 def _edge_payload_bytes(cfg: LTADMMConfig, params) -> int:

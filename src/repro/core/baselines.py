@@ -14,17 +14,29 @@ DSGD and CHOCO-SGD are included as canonical references.  All baselines run
 on stacked ``[A, ...]`` pytrees with the Metropolis–Hastings mixing matrix
 of the SAME ``Topology`` object LT-ADMM-CC runs on, so their communication
 pattern matches LT-ADMM-CC's on every graph family (ring, torus, star,
-complete, random).  Passing a ``TopologySchedule`` plus the round index
-``k`` to ``step`` runs them over time-varying graphs with per-round
-Metropolis–Hastings weights.
+complete, random).  A ``TopologySchedule`` as ``topo`` runs them over
+time-varying graphs with per-round Metropolis–Hastings weights.
+
+Every baseline conforms to the ``core.solver.Solver`` protocol: the
+gradient estimator is bound at construction (``grad_est``), the round
+index rides in the state, and
+
+    state = algo.init(x0)                 # x0: [A, ...] stacked params
+    state = algo.step(state, data, key)   # data leaves: [A, m, ...]
+
+is the uniform step signature shared with LT-ADMM-CC.  Construct them
+through ``solver.make_solver`` spec strings (``"lead:lr=0.1,
+compressor=qbit:bits=8"``) rather than by hand.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, NamedTuple
+from typing import Any
 
 import jax
 import jax.numpy as jnp
+
+import numpy as np
 
 from repro.common.trees import tree_map, tree_sub, tree_zeros_like
 from repro.core import compression
@@ -93,25 +105,102 @@ def _sample_grads(grad_est, x, data, key, batch_size):
     return jax.vmap(one)(jnp.arange(A), x, data)
 
 
+class GossipSolverMixin:
+    """Shared ``Solver``-protocol behavior of the single-loop gossip
+    baselines.  Subclasses declare ``state_fields`` (the param-shaped
+    entries of their state dict, ``"x"`` first) and ``comm_rounds``
+    (communication rounds per iteration, for wire/cost accounting)."""
+
+    state_fields: tuple = ("x",)
+    comm_rounds: int = 1
+    estimator: str = "sgd"  # preferred grad_est family (no VR)
+
+    @property
+    def graph(self):
+        """Uniform accessor shared with ``LTADMMSolver``: the agent
+        graph (``Topology`` or ``TopologySchedule``) the solver runs on."""
+        return self.topo
+
+    # ---- consensus / accounting hooks -------------------------------------
+
+    def consensus_params(self, state):
+        return state["x"]
+
+    def _wire_compressor(self):
+        """What actually moves per neighbor message: the configured
+        compressor, or full-precision for uncompressed methods."""
+        return getattr(self, "compressor", None) or compression.Identity()
+
+    def wire_bytes(self, params, t: int | None = None) -> int:
+        """Bytes the busiest agent transmits per iteration (one message
+        per incident edge per communication round).  For a
+        ``TopologySchedule``, ``t=None`` charges the period-mean active
+        degree; an explicit ``t`` gives the exact round."""
+        per_edge = compression.tree_wire_bytes(
+            self._wire_compressor(), params
+        ) * self.comm_rounds
+        if t is not None and isinstance(self.topo, TopologySchedule):
+            return int(np.max(self.topo.round_degrees(t))) * per_edge
+        return int(round(float(np.max(self.topo.degrees())) * per_edge))
+
+    # ---- sharding / lowering hooks ----------------------------------------
+
+    def abstract_state(self, x_sds):
+        """State-shaped ShapeDtypeStruct tree from abstract stacked
+        params (no allocation)."""
+        return jax.eval_shape(self.init, x_sds)
+
+    def state_sharding(self, x_ps, edge_ps, scalar_ps):
+        """Sharding-spec tree: every param-shaped field shards like the
+        stacked params; the round counter is replicated.  ``edge_ps`` is
+        part of the uniform hook signature (LT-ADMM per-edge state) and
+        unused here."""
+        del edge_ps
+        out = {f: x_ps for f in self.state_fields}
+        out["k"] = scalar_ps
+        return out
+
+    # ---- uniform init/step ------------------------------------------------
+
+    def init(self, x0):
+        st = self._init(x0)
+        st["k"] = jnp.zeros((), jnp.int32)
+        return st
+
+    def step(self, state, data, key):
+        assert self.grad_est is not None, (
+            f"{self.name}: bind a gradient estimator at construction "
+            f"(make_solver(..., grad_est=...))"
+        )
+        k = state["k"]
+        st = self._step(
+            {f: state[f] for f in self.state_fields}, data, key, k
+        )
+        st["k"] = k + 1
+        return st
+
+
 # ---------------------------------------------------------------------------
 # DSGD
 # ---------------------------------------------------------------------------
 
 
 @dataclasses.dataclass(frozen=True)
-class DSGD:
+class DSGD(GossipSolverMixin):
     """Decentralized SGD with gossip averaging (uncompressed)."""
 
     topo: Topology
     lr: float = 0.05
     batch_size: int = 1
+    grad_est: Any = None
     name: str = "dsgd"
 
-    def init(self, x0):
+    def _init(self, x0):
         return {"x": x0}
 
-    def step(self, state, grad_est, data, key, k=None):
-        g = _sample_grads(grad_est, state["x"], data, key, self.batch_size)
+    def _step(self, state, data, key, k):
+        g = _sample_grads(self.grad_est, state["x"], data, key,
+                          self.batch_size)
         x = gossip(self.topo, state["x"], k)
         x = tree_map(lambda a, b: a - self.lr * b, x, g)
         return {"x": x}
@@ -123,20 +212,23 @@ class DSGD:
 
 
 @dataclasses.dataclass(frozen=True)
-class ChocoSGD:
+class ChocoSGD(GossipSolverMixin):
     topo: Topology
     lr: float = 0.05
     gossip_lr: float = 0.8
     compressor: Any = compression.Identity()
     batch_size: int = 1
+    grad_est: Any = None
     name: str = "choco"
 
-    def init(self, x0):
+    state_fields = ("x", "xhat")
+
+    def _init(self, x0):
         return {"x": x0, "xhat": tree_zeros_like(x0)}
 
-    def step(self, state, grad_est, data, key, k=None):
+    def _step(self, state, data, key, k):
         x, xhat = state["x"], state["xhat"]
-        g = _sample_grads(grad_est, x, data, key, self.batch_size)
+        g = _sample_grads(self.grad_est, x, data, key, self.batch_size)
         x = tree_map(lambda a, b: a - self.lr * b, x, g)
         q = _compress_stacked(
             self.compressor, jax.random.fold_in(key, 1),
@@ -154,7 +246,7 @@ class ChocoSGD:
 
 
 @dataclasses.dataclass(frozen=True)
-class LEAD:
+class LEAD(GossipSolverMixin):
     """Primal-dual, compresses y-innovations; NIDS-like when exact."""
 
     topo: Topology
@@ -163,18 +255,21 @@ class LEAD:
     gamma_mix: float = 0.8
     compressor: Any = compression.Identity()
     batch_size: int = 1
+    grad_est: Any = None
     name: str = "lead"
 
-    def init(self, x0):
+    state_fields = ("x", "h", "d")
+
+    def _init(self, x0):
         return {
             "x": x0,
             "h": tree_zeros_like(x0),
             "d": tree_zeros_like(x0),
         }
 
-    def step(self, state, grad_est, data, key, k=None):
+    def _step(self, state, data, key, k):
         x, h, d = state["x"], state["h"], state["d"]
-        g = _sample_grads(grad_est, x, data, key, self.batch_size)
+        g = _sample_grads(self.grad_est, x, data, key, self.batch_size)
         y = tree_map(lambda a, b, c: a - self.lr * (b + c), x, g, d)
         q = _compress_stacked(
             self.compressor, jax.random.fold_in(key, 1),
@@ -198,24 +293,27 @@ class LEAD:
 
 
 @dataclasses.dataclass(frozen=True)
-class COLD:
+class COLD(GossipSolverMixin):
     topo: Topology
     lr: float = 0.05
     gamma_mix: float = 0.8
     compressor: Any = compression.Identity()
     batch_size: int = 1
+    grad_est: Any = None
     name: str = "cold"
 
-    def init(self, x0):
+    state_fields = ("x", "h", "d")
+
+    def _init(self, x0):
         return {
             "x": x0,
             "h": tree_zeros_like(x0),
             "d": tree_zeros_like(x0),
         }
 
-    def step(self, state, grad_est, data, key, k=None):
+    def _step(self, state, data, key, k):
         x, h, d = state["x"], state["h"], state["d"]
-        g = _sample_grads(grad_est, x, data, key, self.batch_size)
+        g = _sample_grads(self.grad_est, x, data, key, self.batch_size)
         y = tree_map(lambda a, b, c: a - self.lr * (b + c), x, g, d)
         q = _compress_stacked(
             self.compressor, jax.random.fold_in(key, 1),
@@ -237,20 +335,24 @@ class COLD:
 
 
 @dataclasses.dataclass(frozen=True)
-class CEDAS:
+class CEDAS(GossipSolverMixin):
     topo: Topology
     lr: float = 0.05
     gossip_lr: float = 0.5
     compressor: Any = compression.Identity()
     batch_size: int = 1
+    grad_est: Any = None
     name: str = "cedas"
 
-    def init(self, x0):
+    state_fields = ("x", "psi_prev", "xhat")
+    comm_rounds = 2  # paper Table I: CEDAS pays 2 t_c per iteration
+
+    def _init(self, x0):
         return {"x": x0, "psi_prev": x0, "xhat": tree_zeros_like(x0)}
 
-    def step(self, state, grad_est, data, key, k=None):
+    def _step(self, state, data, key, k):
         x, psi_prev, xhat = state["x"], state["psi_prev"], state["xhat"]
-        g = _sample_grads(grad_est, x, data, key, self.batch_size)
+        g = _sample_grads(self.grad_est, x, data, key, self.batch_size)
         psi = tree_map(lambda a, b: a - self.lr * b, x, g)
         mix_in = tree_map(lambda p, a, pp: p + a - pp, psi, x, psi_prev)
         q = _compress_stacked(
@@ -275,22 +377,25 @@ class CEDAS:
 
 
 @dataclasses.dataclass(frozen=True)
-class DPDC:
+class DPDC(GossipSolverMixin):
     topo: Topology
     lr: float = 0.05
     dual_lr: float = 0.1
     penalty: float = 0.5
     compressor: Any = compression.Identity()
     batch_size: int = 1
+    grad_est: Any = None
     name: str = "dpdc"
 
-    def init(self, x0):
+    state_fields = ("x", "v", "xhat")
+
+    def _init(self, x0):
         return {"x": x0, "v": tree_zeros_like(x0),
                 "xhat": tree_zeros_like(x0)}
 
-    def step(self, state, grad_est, data, key, k=None):
+    def _step(self, state, data, key, k):
         x, v, xhat = state["x"], state["v"], state["xhat"]
-        g = _sample_grads(grad_est, x, data, key, self.batch_size)
+        g = _sample_grads(self.grad_est, x, data, key, self.batch_size)
         q = _compress_stacked(
             self.compressor, jax.random.fold_in(key, 1),
             tree_sub(x, xhat), _like(x),

@@ -263,11 +263,58 @@ def tree_wire_bytes(comp, tree) -> int:
     )
 
 
-def get_compressor(name: str, **kw):
-    table = {
-        "identity": Identity,
-        "qbit": BBitQuantizer,
-        "randk": RandK,
-        "topk": TopK,
-    }
-    return table[name](**kw)
+COMPRESSORS = {
+    "identity": Identity,
+    "qbit": BBitQuantizer,
+    "randk": RandK,
+    "topk": TopK,
+}
+
+
+def coerce_param(v):
+    """Spec-string value -> python scalar: int, then float, then bool
+    literal, else the string itself (e.g. ``sampler=block``)."""
+    if not isinstance(v, str):
+        return v
+    for cast in (int, float):
+        try:
+            return cast(v)
+        except ValueError:
+            pass
+    if v.lower() in ("true", "false"):
+        return v.lower() == "true"
+    return v
+
+
+def get_compressor(spec: str, **kw):
+    """Compressor from a spec string: ``name[:k=v,...]``.
+
+    ``get_compressor("qbit:bits=4")``,
+    ``get_compressor("randk:fraction=0.25,sampler=block")``.  When the
+    spec is nested inside an outer comma grammar (solver specs), ``|``
+    is accepted in place of ``,``.  Explicit keyword arguments are the
+    legacy construction path (``get_compressor("qbit", bits=4)``) and
+    override spec params on collision.
+    """
+    name, _, rest = spec.partition(":")
+    if name not in COMPRESSORS:
+        raise ValueError(
+            f"unknown compressor {name!r}; choose from "
+            f"{sorted(COMPRESSORS)}"
+        )
+    params = {}
+    for item in rest.replace("|", ",").split(","):
+        if not item:
+            continue
+        k, eq, v = item.partition("=")
+        if not eq:
+            raise ValueError(
+                f"malformed compressor param {item!r} in spec {spec!r} "
+                f"(expected k=v)"
+            )
+        params[k.strip()] = coerce_param(v.strip())
+    params.update(kw)
+    try:
+        return COMPRESSORS[name](**params)
+    except TypeError as e:
+        raise ValueError(f"bad params for compressor {name!r}: {e}") from None

@@ -1,0 +1,344 @@
+"""Unified ``Solver`` protocol + spec-string registry.
+
+Every distributed method in this repo — LT-ADMM-CC and the six gossip
+baselines (DSGD, CHOCO-SGD, LEAD, COLD, CEDAS, DPDC) — shares one shape:
+local training + (compressed) neighbor exchange over an agent graph.
+This module is the API seam that makes that shape explicit, so any
+solver composes with any topology/schedule, any compressor and any
+model, and new methods plug into the launch/benchmarks layers without
+touching them.
+
+Protocol (structural, ``isinstance``-checkable)::
+
+    state = solver.init(x0)                  # x0: stacked [A, ...] params
+    state = solver.step(state, data, key)    # data leaves: [A, m, ...]
+    x     = solver.consensus_params(state)   # [A, ...] per-agent params
+    nbyte = solver.wire_bytes(params, t)     # busiest-agent TX bytes/round
+    sds   = solver.abstract_state(x_sds)     # lowering without allocation
+    ps    = solver.state_sharding(x_ps, edge_ps, scalar_ps)
+
+Registry: a solver is chosen the same way a topology already is — by
+spec string::
+
+    make_solver("ltadmm:tau=5,compressor=qbit:bits=4", graph, ex, est)
+    make_solver("lead:lr=0.1,compressor=qbit:bits=8", graph, ex, sgd)
+
+The grammar is ``name[:k=v,...]``; a ``compressor*`` value is itself a
+nested compressor spec (``qbit:bits=4``; for multiple nested params
+either pipes — ``randk:fraction=0.25|sampler=block`` — or plain commas:
+any ``k=v`` item whose key the solver does not know is folded into the
+preceding compressor value, so ``"ltadmm:compressor=randk:fraction=
+0.25,sampler=block,tau=3"`` parses as expected).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.trees import tree_consensus_error, tree_consensus_mean
+from repro.core import admm, baselines, compression
+from repro.core.admm import LTADMMConfig
+from repro.core.schedule import TopologySchedule
+from repro.core.topology import Exchange
+
+
+@runtime_checkable
+class Solver(Protocol):
+    """What the launch/bench layers require of a distributed method."""
+
+    name: str
+
+    def init(self, x0) -> Any: ...
+
+    def step(self, state, data, key) -> Any: ...
+
+    def consensus_params(self, state) -> Any: ...
+
+    def wire_bytes(self, params, t: int | None = None) -> int: ...
+
+    def abstract_state(self, x_sds) -> Any: ...
+
+    def state_sharding(self, x_ps, edge_ps, scalar_ps) -> Any: ...
+
+
+# ---------------------------------------------------------------------------
+# Consensus diagnostics (solver-agnostic: operate on stacked [A, ...] params
+# — one shared definition in common.trees; admm's state-based wrappers
+# delegate to the same functions)
+# ---------------------------------------------------------------------------
+
+consensus_mean = tree_consensus_mean
+consensus_error = tree_consensus_error
+
+
+# ---------------------------------------------------------------------------
+# LT-ADMM-CC behind the protocol
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class LTADMMSolver:
+    """Paper Algorithm 1 as a ``Solver``.
+
+    Absorbs the static-vs-time-varying dispatch: ``graph`` may be a
+    ``Topology`` (``LTADMMState``) or a ``TopologySchedule``
+    (``LTADMMScheduleState``, asynchronous-ADMM semantics); callers
+    never pick the state class themselves.
+    """
+
+    graph: Any  # Topology | TopologySchedule
+    exchange: Exchange | None
+    grad_est: Any
+    cfg: LTADMMConfig = LTADMMConfig()
+    name: str = "ltadmm"
+
+    estimator = "vr"  # wants a variance-reduced grad_est (Theorem 1)
+
+    @property
+    def is_schedule(self) -> bool:
+        return isinstance(self.graph, TopologySchedule)
+
+    def init(self, x0):
+        if self.is_schedule:
+            return admm.init_schedule(self.cfg, self.graph, self.exchange, x0)
+        return admm.init(self.cfg, self.graph, self.exchange, x0)
+
+    def step(self, state, data, key):
+        if self.is_schedule:
+            return admm.step_schedule(
+                self.cfg, self.graph, self.exchange, self.grad_est, state,
+                data, key,
+            )
+        return admm.step(
+            self.cfg, self.graph, self.exchange, self.grad_est, state, data,
+            key,
+        )
+
+    def consensus_params(self, state):
+        return state.x
+
+    def wire_bytes(self, params, t: int | None = None) -> int:
+        """Busiest-agent TX bytes per outer round (x-message + z-message
+        per incident edge).  For a schedule, ``t=None`` charges the
+        period-mean active degree; explicit ``t`` is the exact round."""
+        if t is not None and self.is_schedule:
+            return admm.wire_bytes_at(self.cfg, self.graph, params, t)
+        return admm.wire_bytes_per_round(self.cfg, self.graph, params)
+
+    # ---- sharding / lowering hooks ----------------------------------------
+
+    def state_tree(self, x_leaf, edge_leaf, k_leaf):
+        """State-shaped tree from representative leaves: every per-agent
+        field gets ``x_leaf``, every per-edge field ``edge_leaf`` (u
+        fields ``None`` in lean mode); the state class follows the
+        graph kind."""
+        u_edge = None if self.cfg.lean else edge_leaf
+        if self.is_schedule:
+            return admm.LTADMMScheduleState(
+                x=x_leaf,
+                x_hat_edge=edge_leaf,
+                u_edge=u_edge,
+                z=edge_leaf,
+                s=edge_leaf,
+                s_tilde=edge_leaf,
+                x_hat_nbr=edge_leaf,
+                u_nbr=u_edge,
+                k=k_leaf,
+            )
+        return admm.LTADMMState(
+            x=x_leaf,
+            x_hat=x_leaf,
+            u=None if self.cfg.lean else x_leaf,
+            z=edge_leaf,
+            s=edge_leaf,
+            s_tilde=edge_leaf,
+            x_hat_nbr=edge_leaf,
+            u_nbr=u_edge,
+            k=k_leaf,
+        )
+
+    def abstract_state(self, x_sds):
+        edge = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(
+                (s.shape[0], self.graph.n_slots) + s.shape[1:], s.dtype
+            ),
+            x_sds,
+        )
+        return self.state_tree(
+            x_sds, edge, jax.ShapeDtypeStruct((), jnp.int32)
+        )
+
+    def state_sharding(self, x_ps, edge_ps, scalar_ps):
+        return self.state_tree(x_ps, edge_ps, scalar_ps)
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SolverEntry:
+    name: str
+    factory: Callable  # (graph, exchange, grad_est, **params) -> Solver
+    params: frozenset  # spec params the solver accepts
+    nested: frozenset  # params whose values are nested compressor specs
+    estimator: str  # preferred grad_est family: "vr" | "sgd"
+    doc: str = ""
+
+
+SOLVERS: dict[str, SolverEntry] = {}
+
+
+def register_solver(name, factory, params, nested=(), estimator="sgd",
+                    doc=""):
+    """Register a solver factory under a spec name (idempotent per name;
+    later registrations win, so downstream code can shadow a method)."""
+    SOLVERS[name] = SolverEntry(
+        name=name,
+        factory=factory,
+        params=frozenset(params),
+        nested=frozenset(nested),
+        estimator=estimator,
+        doc=doc,
+    )
+
+
+def solver_entry(spec: str) -> SolverEntry:
+    name = spec.partition(":")[0]
+    if name not in SOLVERS:
+        raise ValueError(
+            f"unknown solver {name!r}; choose from {sorted(SOLVERS)}"
+        )
+    return SOLVERS[name]
+
+
+def parse_solver_spec(spec: str):
+    """``name[:k=v,...]`` -> (entry, params dict).
+
+    Unknown keys directly after a nested-spec key are folded into that
+    value (see module docstring); any other unknown key raises."""
+    entry = solver_entry(spec)
+    rest = spec.partition(":")[2]
+    kw: dict = {}
+    last_nested = None
+    for item in rest.split(","):
+        item = item.strip()
+        if not item:
+            continue
+        k, eq, v = item.partition("=")
+        k = k.strip()
+        if k in entry.params and eq:
+            kw[k] = v.strip()
+            last_nested = k if k in entry.nested else None
+        elif last_nested is not None:
+            kw[last_nested] += "," + item
+        else:
+            raise ValueError(
+                f"solver {entry.name!r} got unknown param {item!r} "
+                f"(accepted: {sorted(entry.params)})"
+            )
+    return entry, kw
+
+
+def make_solver(spec: str, graph, exchange=None, grad_est=None,
+                defaults=None) -> Solver:
+    """THE solver construction entry point.
+
+    ``spec``: registry spec string (``"ltadmm"``, ``"lead:lr=0.1,
+    compressor=qbit:bits=8"``, ...).  ``graph`` is a ``Topology`` or
+    ``TopologySchedule``; ``exchange`` the (union-graph) ``Exchange``
+    for message-passing solvers; ``grad_est`` the gradient estimator
+    (``vr.SagaTable``/``SvrgAnchor`` for LT-ADMM, ``vr.PlainSgd``/
+    ``FullGrad`` for the baselines).  ``defaults`` is a dict of
+    fallback params (e.g. from a ``TrainRecipe``) — spec params win,
+    and defaults the solver does not accept are dropped.
+    """
+    entry, kw = parse_solver_spec(spec)
+    merged = {
+        k: v for k, v in (defaults or {}).items() if k in entry.params
+    }
+    merged.update(kw)
+    return entry.factory(graph, exchange, grad_est, **merged)
+
+
+def _as_compressor(v):
+    return compression.get_compressor(v) if isinstance(v, str) else v
+
+
+# ---- ltadmm ---------------------------------------------------------------
+
+_LTADMM_CFG_FIELDS = tuple(
+    f.name for f in dataclasses.fields(LTADMMConfig)
+    if not f.name.startswith("compressor")
+)
+
+
+def _make_ltadmm(graph, exchange, grad_est, **kw):
+    comp = kw.pop("compressor", None)
+    if comp is not None:
+        comp = _as_compressor(comp)
+        kw.setdefault("compressor_x", comp)
+        kw.setdefault("compressor_z", comp)
+    for key in ("compressor_x", "compressor_z"):
+        if key in kw:
+            kw[key] = _as_compressor(kw[key])
+    cfg = LTADMMConfig(
+        **{k: compression.coerce_param(v) for k, v in kw.items()}
+    )
+    return LTADMMSolver(
+        graph=graph, exchange=exchange, grad_est=grad_est, cfg=cfg
+    )
+
+
+register_solver(
+    "ltadmm",
+    _make_ltadmm,
+    params=_LTADMM_CFG_FIELDS + ("compressor", "compressor_x",
+                                 "compressor_z"),
+    nested=("compressor", "compressor_x", "compressor_z"),
+    estimator="vr",
+    doc="LT-ADMM-CC (paper Alg. 1): local VR training + compressed "
+        "x/z exchanges; exact convergence (Theorem 1)",
+)
+
+
+# ---- gossip baselines -----------------------------------------------------
+
+_BASELINE_DOCS = {
+    "dsgd": "decentralized SGD with uncompressed gossip averaging",
+    "choco": "CHOCO-SGD: compressed gossip with error feedback",
+    "lead": "LEAD: primal-dual, compressed y-innovations",
+    "cold": "COLD: LEAD skeleton, innovation state (alpha = 1)",
+    "cedas": "CEDAS: exact diffusion + compressed gossip",
+    "dpdc": "DPDC: primal-dual with compressed copies",
+}
+
+
+def _baseline_factory(cls):
+    def factory(graph, exchange, grad_est, **kw):
+        del exchange  # baselines gossip through a dense mixing matrix
+        if "compressor" in kw:
+            kw["compressor"] = _as_compressor(kw["compressor"])
+        kw = {k: compression.coerce_param(v) for k, v in kw.items()}
+        return cls(topo=graph, grad_est=grad_est, **kw)
+
+    return factory
+
+
+for _name, _cls in baselines.ALL_BASELINES.items():
+    _fields = tuple(
+        f.name for f in dataclasses.fields(_cls)
+        if f.name not in ("topo", "grad_est", "name")
+    )
+    register_solver(
+        _name,
+        _baseline_factory(_cls),
+        params=_fields,
+        nested=("compressor",) if "compressor" in _fields else (),
+        estimator="sgd",
+        doc=_BASELINE_DOCS.get(_name, ""),
+    )

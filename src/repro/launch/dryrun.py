@@ -107,14 +107,16 @@ def dryrun_one(arch_id, shape_name, multi_pod, recipe=None, verbose=True,
     aaxis = agent_axis_for(mesh)
     t0 = time.time()
 
-    _mesh_ctx = jax.set_mesh(mesh)
+    # jax >= 0.5.x: set_mesh; 0.4.37 floor: Mesh is itself a context
+    # manager with the same thread-local effect for this use
+    _mesh_ctx = jax.set_mesh(mesh) if hasattr(jax, "set_mesh") else mesh
     _mesh_ctx.__enter__()
     if shape.kind == "train":
-        step_fn, state_ps, init_fn, topo, acfg = steps.build_admm_train(
-            arch, cfg, mesh, recipe
+        step_fn, state_ps, init_fn, solver = steps.build_train(
+            arch, cfg, mesh, variant.get("solver", "ltadmm"), recipe
         )
-        n_agents = topo.n_agents
-        state_sds = steps.admm_abstract_state(arch, cfg, acfg, topo)
+        n_agents = solver.graph.n_agents
+        state_sds = steps.abstract_train_state(arch, cfg, solver)
         data_sds = input_specs(arch_id, shape_name, n_agents=n_agents)
         data_ps = shd.train_data_pspec(
             mesh, {k: len(v.shape) for k, v in data_sds.items()}
@@ -174,6 +176,8 @@ def dryrun_one(arch_id, shape_name, multi_pod, recipe=None, verbose=True,
     t_compile = time.time() - t0
     mem = compiled.memory_analysis()
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):  # jax 0.4.x: one dict per device
+        ca = ca[0] if ca else {}
     stats = ha.analyze(compiled.as_text())
     terms = ha.roofline_terms(stats)
     mf = model_flops(

@@ -163,7 +163,6 @@ def _dot_flops(op: Op, symbols: dict) -> float:
     for ci in cm.group(1).split(","):
         if ci != "" and int(ci) < len(lhs_dims):
             contracted *= lhs_dims[int(ci)]
-    del res
     return 2.0 * elems * contracted
 
 

@@ -1,21 +1,26 @@
-"""Step builders: LT-ADMM-CC train_step, all-reduce baseline train_step,
-prefill_step and serve_step — each with full sharding trees for jit.
+"""Step builders: solver train_step (LT-ADMM-CC or any registered
+baseline), all-reduce DDP train_step, prefill_step and serve_step — each
+with full sharding trees for jit.
 
-This is where the paper's algorithm meets the model zoo: the ADMM state is a
-pytree over the *model parameters* with a leading agent axis, the VR
-estimator wraps the model's loss gradient, and the compressed neighbor
-exchange runs over the mesh agent axis.
+This is where the paper's algorithms meet the model zoo: the solver state
+is a pytree over the *model parameters* with a leading agent axis, the
+gradient estimator wraps the model's loss gradient, and the (compressed)
+neighbor exchange runs over the mesh agent axis.  ``build_train`` works
+for ANY solver in ``core.solver.SOLVERS`` — the solver, like the
+topology, is chosen by spec string.
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.core import admm, compression, vr
-from repro.core.schedule import TopologySchedule, build_graph
+from repro.core.schedule import build_graph
+from repro.core.solver import make_solver, solver_entry
 from repro.launch import sharding as shd
 from repro.launch.mesh import agent_axis_for
 from repro.models import encdec, transformer as tr
@@ -41,17 +46,18 @@ def model_loss(arch_def, cfg):
 
 
 # ---------------------------------------------------------------------------
-# LT-ADMM-CC train step
+# Solver train step (LT-ADMM-CC + every registered baseline)
 # ---------------------------------------------------------------------------
 
 
 @dataclasses.dataclass(frozen=True)
 class TrainRecipe:
-    """Transformer-scale LT-ADMM-CC hyperparameters.
+    """Transformer-scale solver defaults.
 
     gamma is much smaller than the convex-experiment value (0.3): L for a
     transformer loss is far larger.  batch_size counts sequences per inner
-    step out of the agent's m_local.
+    step out of the agent's m_local.  Every field is a DEFAULT — params in
+    the solver spec string given to ``build_train`` win.
     """
 
     rho: float = 0.1
@@ -61,7 +67,10 @@ class TrainRecipe:
     eta: float = 1.0
     tau: int = 5
     batch_size: int = 4
-    compressor: str = "qbit"  # paper Fig.2 default: 8-bit quantizer
+    # compressor spec string ("qbit:bits=4", "randk:fraction=0.25,
+    # sampler=block", ...); paper Fig.2 default: 8-bit quantizer
+    compressor: str = "qbit"
+    # DEPRECATED tuple-of-pairs params, merged into ``compressor``
     comp_kwargs: tuple = ()
     # agent graph spec — anything accepted by schedule.make_graph: a static
     # family ("ring", "grid2d", "star", "complete", "erdos:p=0.3", ...) or a
@@ -75,10 +84,50 @@ class TrainRecipe:
     # the cost of a scan (1 = single fused pass)
     anchor_microbatches: int = 1
 
+    def compressor_spec(self) -> str:
+        """The compressor spec string, folding in the deprecated
+        ``comp_kwargs`` tuple form when present."""
+        spec = self.compressor
+        if self.comp_kwargs:
+            warnings.warn(
+                "TrainRecipe.comp_kwargs is deprecated; put params in the "
+                "compressor spec string instead (e.g. 'qbit:bits=4')",
+                DeprecationWarning,
+                stacklevel=2,
+            )
+            params = ",".join(f"{k}={v}" for k, v in self.comp_kwargs)
+            spec = spec + ("," if ":" in spec else ":") + params
+        return spec
+
+    def solver_defaults(self, solver_name: str) -> dict:
+        """Fallback params for ``make_solver`` (spec params override;
+        keys a solver does not accept are dropped there)."""
+        if solver_name == "ltadmm":
+            return {
+                "rho": self.rho,
+                "beta": self.beta,
+                "gamma": self.gamma,
+                "r": self.r,
+                "eta": self.eta,
+                "tau": self.tau,
+                "batch_size": self.batch_size,
+                "compressor": self.compressor_spec(),
+            }
+        return {
+            "batch_size": self.batch_size,
+            "compressor": self.compressor_spec(),
+        }
+
     def admm_config(self):
-        comp = compression.get_compressor(
-            self.compressor, **dict(self.comp_kwargs)
+        """DEPRECATED: construct through ``solver.make_solver`` (the
+        ``ltadmm`` entry) instead."""
+        warnings.warn(
+            "TrainRecipe.admm_config() is deprecated; build an LT-ADMM "
+            "solver via core.solver.make_solver('ltadmm:...') instead",
+            DeprecationWarning,
+            stacklevel=2,
         )
+        comp = compression.get_compressor(self.compressor_spec())
         return admm.LTADMMConfig(
             rho=self.rho,
             beta=self.beta,
@@ -92,48 +141,13 @@ class TrainRecipe:
         )
 
 
-def _admm_state_tree(graph, acfg, x_leaf, edge_leaf, k_leaf):
-    """State-shaped tree (sharding specs or abstract leaves): every
-    per-agent field gets ``x_leaf``, every per-edge field ``edge_leaf``
-    (u fields None in lean mode); picks the schedule state class when
-    ``graph`` is a ``TopologySchedule``."""
-    u_edge = None if acfg.lean else edge_leaf
-    if isinstance(graph, TopologySchedule):
-        return admm.LTADMMScheduleState(
-            x=x_leaf,
-            x_hat_edge=edge_leaf,
-            u_edge=u_edge,
-            z=edge_leaf,
-            s=edge_leaf,
-            s_tilde=edge_leaf,
-            x_hat_nbr=edge_leaf,
-            u_nbr=u_edge,
-            k=k_leaf,
-        )
-    return admm.LTADMMState(
-        x=x_leaf,
-        x_hat=x_leaf,
-        u=None if acfg.lean else x_leaf,
-        z=edge_leaf,
-        s=edge_leaf,
-        s_tilde=edge_leaf,
-        x_hat_nbr=edge_leaf,
-        u_nbr=u_edge,
-        k=k_leaf,
-    )
-
-
-def build_admm_train(arch_def, cfg, mesh, recipe: TrainRecipe):
-    """Returns (step_fn, state_sharding, init_fn, graph, acfg); ``graph``
-    is the static ``Topology`` or ``TopologySchedule`` of the recipe."""
-    aaxis = agent_axis_for(mesh)
-    n_agents = mesh.shape[aaxis]
-    graph, exchange = build_graph(recipe.topology, n_agents,
-                                  axis=aaxis, mesh=mesh)
-    acfg = recipe.admm_config()
-
-    loss = model_loss(arch_def, cfg)
-    grad_fn = jax.grad(loss)
+def build_estimator(arch_def, cfg, recipe: TrainRecipe, kind: str):
+    """Gradient estimator over the model loss: ``"vr"`` -> SVRG anchor
+    (optionally microbatched over m_local), ``"sgd"`` -> plain minibatch
+    gradients (the regime where the paper's baselines plateau)."""
+    grad_fn = jax.grad(model_loss(arch_def, cfg))
+    if kind != "vr":
+        return vr.PlainSgd(batch_grad=grad_fn)
     if recipe.anchor_microbatches > 1:
         nmb = recipe.anchor_microbatches
 
@@ -147,42 +161,81 @@ def build_admm_train(arch_def, cfg, mesh, recipe: TrainRecipe):
             return jax.tree.map(lambda g: jnp.mean(g, axis=0), grads)
     else:
         full_grad = grad_fn
-    est = vr.SvrgAnchor(batch_grad=grad_fn, full_grad=full_grad)
+    return vr.SvrgAnchor(batch_grad=grad_fn, full_grad=full_grad)
+
+
+def build_train(arch_def, cfg, mesh, solver_spec: str,
+                recipe: TrainRecipe | None = None):
+    """Train-step builder for ANY registered solver.
+
+    Returns ``(step_fn, state_sharding, init_fn, solver)``:
+    ``step_fn(state, data, seed)`` advances one outer round,
+    ``state_sharding`` is the jit in/out sharding tree,
+    ``init_fn(x0_stacked)`` builds the state from stacked ``[A, ...]``
+    params, and ``solver`` carries the graph/config/accounting hooks.
+    The recipe supplies topology + hyperparameter defaults; params in
+    ``solver_spec`` win.
+    """
+    recipe = recipe or TrainRecipe()
+    aaxis = agent_axis_for(mesh)
+    n_agents = mesh.shape[aaxis]
+    graph, exchange = build_graph(recipe.topology, n_agents,
+                                  axis=aaxis, mesh=mesh)
+    entry = solver_entry(solver_spec)
+    est = build_estimator(arch_def, cfg, recipe, entry.estimator)
+    solver = make_solver(solver_spec, graph, exchange, est,
+                         defaults=recipe.solver_defaults(entry.name))
 
     def step_fn(state, data, seed):
-        round_key = jax.random.PRNGKey(seed)
-        new_state = admm.step(acfg, graph, exchange, est, state, data,
-                              round_key)
-        return new_state
-
-    def init_fn(x0_stacked):
-        return admm.init(acfg, graph, exchange, x0_stacked)
+        return solver.step(state, data, jax.random.PRNGKey(seed))
 
     # ---- shardings ---------------------------------------------------------
     specs = model_specs(arch_def, cfg)
     pps = shd.param_pspec(mesh, "admm", specs)
     x_ps = shd.prefix_pspec(pps, aaxis)  # [A, ...]
     edge_ps = shd.prefix_pspec(pps, aaxis, None)  # [A, S, ...]
-    state_ps = _admm_state_tree(graph, acfg, x_ps, edge_ps, P())
-    return step_fn, state_ps, init_fn, graph, acfg
+    state_ps = solver.state_sharding(x_ps, edge_ps, P())
+    return step_fn, state_ps, solver.init, solver
+
+
+def abstract_train_state(arch_def, cfg, solver):
+    """Abstract solver state for lowering (no allocation)."""
+    specs = model_specs(arch_def, cfg)
+    ap = abstract_params(specs, cfg.dtype)
+    a = solver.graph.n_agents
+    x_sds = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((a,) + s.shape, s.dtype), ap
+    )
+    return solver.abstract_state(x_sds)
+
+
+# ---- deprecation shims over the unified API --------------------------------
+
+
+def build_admm_train(arch_def, cfg, mesh, recipe: TrainRecipe):
+    """DEPRECATED: use ``build_train(arch, cfg, mesh, "ltadmm", recipe)``.
+
+    Returns the old 5-tuple (step_fn, state_sharding, init_fn, graph,
+    acfg) on top of the unified builder."""
+    warnings.warn(
+        "build_admm_train is deprecated; use "
+        "build_train(arch, cfg, mesh, 'ltadmm', recipe)",
+        DeprecationWarning,
+        stacklevel=2,
+    )
+    step_fn, state_ps, init_fn, solver = build_train(
+        arch_def, cfg, mesh, "ltadmm", recipe
+    )
+    return step_fn, state_ps, init_fn, solver.graph, solver.cfg
 
 
 def admm_abstract_state(arch_def, cfg, acfg, graph):
-    """Abstract state for lowering (no allocation) — LTADMMState for a
-    static topology, LTADMMScheduleState for a TopologySchedule."""
-    specs = model_specs(arch_def, cfg)
-    ap = abstract_params(specs, cfg.dtype)
-    a = graph.n_agents
+    """DEPRECATED: use ``abstract_train_state(arch, cfg, solver)``."""
+    from repro.core.solver import LTADMMSolver
 
-    def lead(extra):
-        return jax.tree.map(
-            lambda s: jax.ShapeDtypeStruct(extra + s.shape, s.dtype), ap
-        )
-
-    return _admm_state_tree(
-        graph, acfg, lead((a,)), lead((a, graph.n_slots)),
-        jax.ShapeDtypeStruct((), jnp.int32),
-    )
+    solver = LTADMMSolver(graph=graph, exchange=None, grad_est=None,
+                          cfg=acfg)
+    return abstract_train_state(arch_def, cfg, solver)
 
 
 # ---------------------------------------------------------------------------

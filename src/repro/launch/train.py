@@ -1,19 +1,22 @@
-"""LT-ADMM-CC training driver.
+"""Distributed-training driver: any registered solver on a real model.
 
-Runs the paper's algorithm end-to-end on a real model: agents hold
-heterogeneous synthetic data shards, perform tau local SVRG steps per round,
-and exchange compressed x-/z-messages over the agent graph selected with
-``--topology`` (ring, grid2d, star, complete, erdos, smallworld) or a
-time-varying ``--topology-schedule`` (cycle:ring|star, drop:p=0.2,...,
-gossip:edges=2,...).  On a single host device the graph is simulated (same
-code path, gather-by-index exchange); on a multi-device mesh the exchange
-is one collective-permute per neighbor slot over the (union) agent axis —
-schedules keep that program static and mask inactive edges per round.
+Runs LT-ADMM-CC (default) or any baseline from ``core.solver.SOLVERS``
+end-to-end: agents hold heterogeneous synthetic data shards, train
+locally, and exchange (compressed) messages over the agent graph
+selected with ``--topology`` (ring, grid2d, star, complete, erdos,
+smallworld) or a time-varying ``--topology-schedule`` (cycle:ring|star,
+drop:p=0.2,..., gossip:edges=2,...).  On a single host device the graph
+is simulated (same code path, gather-by-index exchange); on a
+multi-device mesh the exchange is one collective-permute per neighbor
+slot over the (union) agent axis — schedules keep that program static
+and mask inactive edges per round.
 
     PYTHONPATH=src python -m repro.launch.train --arch qwen3-0.6b --smoke \
         --agents 4 --rounds 20 --compressor qbit --topology complete
     PYTHONPATH=src python -m repro.launch.train --smoke --agents 4 \
         --rounds 20 --topology-schedule drop:p=0.25,base=complete
+    PYTHONPATH=src python -m repro.launch.train --smoke --agents 4 \
+        --rounds 20 --solver choco:lr=0.02 --topology ring
 """
 from __future__ import annotations
 
@@ -26,8 +29,14 @@ import jax.numpy as jnp
 
 from repro.checkpoint import save_checkpoint
 from repro.configs import ARCHS
-from repro.core import admm, vr
-from repro.core.schedule import SCHEDULES, build_graph
+from repro.core import vr
+from repro.core.schedule import SCHEDULES, TopologySchedule, build_graph
+from repro.core.solver import (
+    SOLVERS,
+    consensus_error,
+    make_solver,
+    solver_entry,
+)
 from repro.core.topology import TOPOLOGIES
 from repro.data import SyntheticLMDataset
 from repro.launch.steps import TrainRecipe, model_loss, model_specs
@@ -48,24 +57,30 @@ def build(args):
     # identical trajectories); a schedule compiles the union graph's
     # wire program once, per-round masks select the active edges
     graph, ex = build_graph(spec, args.agents)
+    comp_spec = (
+        f"qbit:bits={args.bits}" if args.compressor == "qbit" else
+        f"randk:fraction={args.fraction},sampler=block"
+        if args.compressor == "randk" else args.compressor
+    )
     recipe = TrainRecipe(
         tau=args.tau,
         gamma=args.gamma,
         beta=args.beta,
         batch_size=args.batch_size,
-        compressor=args.compressor,
+        compressor=comp_spec,
         topology=spec,
-        comp_kwargs=(
-            (("bits", args.bits),) if args.compressor == "qbit" else
-            (("fraction", args.fraction), ("sampler", "block"))
-            if args.compressor == "randk" else ()
-        ),
     )
-    acfg = recipe.admm_config()
+    entry = solver_entry(args.solver)
     loss = model_loss(arch, cfg)
     grad = jax.grad(loss)
-    est = vr.SvrgAnchor(batch_grad=grad, full_grad=grad)
-    return arch, cfg, graph, ex, acfg, est, loss
+    est = (
+        vr.SvrgAnchor(batch_grad=grad, full_grad=grad)
+        if entry.estimator == "vr"
+        else vr.PlainSgd(batch_grad=grad)
+    )
+    solver = make_solver(args.solver, graph, ex, est,
+                         defaults=recipe.solver_defaults(entry.name))
+    return arch, cfg, solver, loss
 
 
 def main():
@@ -74,6 +89,11 @@ def main():
     ap.add_argument("--smoke", action="store_true",
                     help="reduced config (CPU-friendly)")
     ap.add_argument("--agents", type=int, default=4)
+    ap.add_argument("--solver", default="ltadmm",
+                    help=f"solver spec, one of {sorted(SOLVERS)} with "
+                         "optional :k=v,... params (e.g. ltadmm:tau=8, "
+                         "choco:lr=0.02); CLI hyperparameter flags are "
+                         "defaults — spec params win")
     ap.add_argument("--topology", default="ring",
                     help=f"agent graph spec, one of {TOPOLOGIES} with "
                          "optional :k=v,... params (e.g. erdos:p=0.4,seed=1)")
@@ -99,7 +119,7 @@ def main():
     ap.add_argument("--log-every", type=int, default=1)
     args = ap.parse_args()
 
-    arch, cfg, graph, ex, acfg, est, loss = build(args)
+    arch, cfg, solver, loss = build(args)
     ds = SyntheticLMDataset(
         vocab=cfg.vocab, seq_len=args.seq_len, n_agents=args.agents,
         m_local=args.m_local, heterogeneity=args.heterogeneity,
@@ -108,23 +128,34 @@ def main():
 
     params0 = init_params(jax.random.key(args.seed + 1), model_specs(arch, cfg))
     print(f"# arch={cfg.name} params={param_count(model_specs(arch, cfg)):,} "
-          f"agents={args.agents} "
-          f"topology={args.topology_schedule or args.topology} "
-          f"tau={acfg.tau} compressor={args.compressor}")
-    print(f"# wire bytes/agent/round: "
-          f"{admm.wire_bytes_per_round(acfg, graph, params0):,} "
-          f"(f32 DDP equivalent: "
-          f"{2 * acfg.tau * sum(x.nbytes for x in jax.tree.leaves(params0)):,})")
+          f"agents={args.agents} solver={args.solver} "
+          f"topology={args.topology_schedule or args.topology}")
+    # wire accounting: for a time-varying schedule only the links active
+    # in a round carry payloads — report the exact round-0 cost alongside
+    # the period-mean; static graphs have a single per-round figure.
+    # DDP equivalent: one LT-ADMM round covers tau local steps (tau f32
+    # all-reduces); one baseline iteration covers one
+    tau = getattr(getattr(solver, "cfg", None), "tau", 1)
+    ddp = 2 * tau * sum(x.nbytes for x in jax.tree.leaves(params0))
+    if isinstance(solver.graph, TopologySchedule):
+        print(f"# wire bytes/agent/round: "
+              f"{solver.wire_bytes(params0, t=0):,} at round 0, "
+              f"{solver.wire_bytes(params0):,} period-mean "
+              f"(f32 DDP equivalent: {ddp:,})")
+    else:
+        print(f"# wire bytes/agent/round: {solver.wire_bytes(params0):,} "
+              f"(f32 DDP equivalent: {ddp:,})")
 
     x0 = jax.tree.map(
         lambda t: jnp.broadcast_to(t[None], (args.agents,) + t.shape).copy(),
         params0,
     )
-    state = admm.init(acfg, graph, ex, x0)
-    step = jax.jit(lambda s, k: admm.step(acfg, graph, ex, est, s, data, k))
+    state = solver.init(x0)
+    step = jax.jit(lambda s, k: solver.step(s, data, k))
 
     def mean_loss(state):
-        pbar = jax.tree.map(lambda t: jnp.mean(t, axis=0), state.x)
+        x = solver.consensus_params(state)
+        pbar = jax.tree.map(lambda t: jnp.mean(t, axis=0), x)
         ls = jax.vmap(lambda d: loss(pbar, {"tokens": d}))(data["tokens"])
         return float(jnp.mean(ls))
 
@@ -135,13 +166,17 @@ def main():
             print(json.dumps({
                 "round": r,
                 "mean_loss": round(mean_loss(state), 4),
-                "consensus_err": float(admm.consensus_error(state)),
+                "consensus_err": float(
+                    consensus_error(solver.consensus_params(state))
+                ),
                 "wall_s": round(time.time() - t_start, 1),
             }))
     if args.checkpoint:
-        pbar = jax.tree.map(lambda t: jnp.mean(t, axis=0), state.x)
+        x = solver.consensus_params(state)
+        pbar = jax.tree.map(lambda t: jnp.mean(t, axis=0), x)
         save_checkpoint(args.checkpoint, pbar, step=args.rounds,
-                        extra={"arch": args.arch, "smoke": args.smoke})
+                        extra={"arch": args.arch, "smoke": args.smoke,
+                               "solver": args.solver})
         print(f"# checkpoint written to {args.checkpoint}")
 
 

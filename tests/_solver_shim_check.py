@@ -1,0 +1,68 @@
+"""Deprecation-shim equivalence, run in a 4-device subprocess
+(tests/test_solver.py drives this): ``build_admm_train`` must warn
+``DeprecationWarning`` and produce identical shardings, init state and
+step trajectory to ``build_train(..., "ltadmm", ...)``."""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+
+import warnings  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.configs import ARCHS  # noqa: E402
+from repro.data import SyntheticLMDataset  # noqa: E402
+from repro.launch import steps  # noqa: E402
+from repro.launch.mesh import make_host_mesh  # noqa: E402
+from repro.models.common import init_params  # noqa: E402
+
+
+def main():
+    assert len(jax.devices()) == 4, jax.devices()
+    mesh = make_host_mesh(4, model=1)  # 4 agents on the data axis
+    arch = ARCHS["qwen3-0.6b"]
+    cfg = arch.make_smoke()
+    recipe = steps.TrainRecipe(tau=1, batch_size=1,
+                               compressor="qbit:bits=8", topology="ring")
+
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        step_old, ps_old, init_old, graph, acfg = steps.build_admm_train(
+            arch, cfg, mesh, recipe
+        )
+    assert any(issubclass(w.category, DeprecationWarning) for w in caught), (
+        "build_admm_train must emit DeprecationWarning"
+    )
+    step_new, ps_new, init_new, solver = steps.build_train(
+        arch, cfg, mesh, "ltadmm", recipe
+    )
+    assert acfg == solver.cfg, (acfg, solver.cfg)
+    assert graph.name == solver.graph.name
+    assert jax.tree.structure(ps_old) == jax.tree.structure(ps_new)
+    assert jax.tree.leaves(ps_old) == jax.tree.leaves(ps_new)
+
+    ds = SyntheticLMDataset(vocab=cfg.vocab, seq_len=16, n_agents=4,
+                            m_local=2)
+    data = {"tokens": ds.sample(jax.random.key(0))}
+    params0 = init_params(jax.random.key(1), steps.model_specs(arch, cfg))
+    x0 = jax.tree.map(
+        lambda t: jnp.broadcast_to(t[None], (4,) + t.shape), params0
+    )
+    st_old, st_new = init_old(x0), init_new(x0)
+    for seed in (7, 8):
+        st_old = step_old(st_old, data, seed)
+        st_new = step_new(st_new, data, seed)
+    for a, b in zip(jax.tree.leaves(st_old), jax.tree.leaves(st_new)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    # the deprecated abstract-state helper matches the solver hook
+    sds_old = steps.admm_abstract_state(arch, cfg, acfg, graph)
+    sds_new = steps.abstract_train_state(arch, cfg, solver)
+    assert jax.tree.leaves(sds_old) == jax.tree.leaves(sds_new)
+    print("SHIM-CHECK OK")
+
+
+if __name__ == "__main__":
+    main()

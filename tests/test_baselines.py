@@ -16,43 +16,43 @@ SGD_EST = vr.PlainSgd(batch_grad=PROB.batch_grad)
 FULL_EST = vr.FullGrad(full_grad=PROB.full_grad)
 
 
-def _run(algo, est, iters):
+def _run(algo, iters):
     st = algo.init(jnp.zeros((PROB.n_agents, PROB.n)))
-    step = jax.jit(lambda s, k: algo.step(s, est, DATA, k))
+    step = jax.jit(algo.step)
     for i in range(iters):
-        st = step(st, jax.random.key(i))
-    xbar = jnp.mean(st["x"], axis=0)
+        st = step(st, DATA, jax.random.key(i))
+    xbar = jnp.mean(algo.consensus_params(st), axis=0)
     return float(PROB.global_grad_norm_sq(xbar, DATA))
 
 
 @pytest.mark.parametrize(
     "algo",
     [
-        baselines.DSGD(TOPO, lr=0.1),
-        baselines.ChocoSGD(TOPO, lr=0.1, compressor=Q8),
-        baselines.LEAD(TOPO, lr=0.1, compressor=Q8),
-        baselines.COLD(TOPO, lr=0.1, compressor=Q8),
-        baselines.CEDAS(TOPO, lr=0.1, compressor=Q8),
-        baselines.DPDC(TOPO, lr=0.1, compressor=Q8),
+        baselines.DSGD(TOPO, lr=0.1, grad_est=SGD_EST),
+        baselines.ChocoSGD(TOPO, lr=0.1, compressor=Q8, grad_est=SGD_EST),
+        baselines.LEAD(TOPO, lr=0.1, compressor=Q8, grad_est=SGD_EST),
+        baselines.COLD(TOPO, lr=0.1, compressor=Q8, grad_est=SGD_EST),
+        baselines.CEDAS(TOPO, lr=0.1, compressor=Q8, grad_est=SGD_EST),
+        baselines.DPDC(TOPO, lr=0.1, compressor=Q8, grad_est=SGD_EST),
     ],
     ids=lambda a: a.name,
 )
 def test_sgd_baselines_plateau_at_noise_ball(algo):
-    gn = _run(algo, SGD_EST, 2500)
+    gn = _run(algo, 2500)
     assert 1e-6 < gn < 1e-1, gn  # stuck well above the exact-convergence floor
 
 
 @pytest.mark.parametrize(
     "algo",
     [
-        baselines.LEAD(TOPO, lr=0.1, compressor=Q8),
-        baselines.COLD(TOPO, lr=0.1, compressor=Q8),
-        baselines.DPDC(TOPO, lr=0.1, compressor=Q8),
+        baselines.LEAD(TOPO, lr=0.1, compressor=Q8, grad_est=FULL_EST),
+        baselines.COLD(TOPO, lr=0.1, compressor=Q8, grad_est=FULL_EST),
+        baselines.DPDC(TOPO, lr=0.1, compressor=Q8, grad_est=FULL_EST),
     ],
     ids=lambda a: a.name,
 )
 def test_full_grad_baselines_converge_exactly(algo):
-    gn = _run(algo, FULL_EST, 2500)
+    gn = _run(algo, 2500)
     assert gn < 1e-9, gn
 
 

@@ -143,12 +143,12 @@ def test_gossip_baseline_over_schedule():
     prob = LogisticProblem()
     data = prob.make_data(jax.random.key(0))
     sched = S.cycle_schedule([T.Ring(prob.n_agents), T.Star(prob.n_agents)])
-    algo = baselines.DSGD(sched, lr=0.05)
     est = vr.PlainSgd(batch_grad=prob.batch_grad)
+    algo = baselines.DSGD(sched, lr=0.05, grad_est=est)
     st = algo.init(jnp.zeros((prob.n_agents, prob.n)))
-    step = jax.jit(lambda s, key, k: algo.step(s, est, data, key, k))
+    step = jax.jit(algo.step)  # round index rides in the state
     for i in range(400):
-        st = step(st, jax.random.key(i), jnp.int32(i))
+        st = step(st, data, jax.random.key(i))
     xbar = jnp.mean(st["x"], axis=0)
     gn = float(prob.global_grad_norm_sq(xbar, data))
     assert gn < 1e-1, gn

@@ -1,0 +1,291 @@
+"""Unified Solver protocol + registry: spec-string round-trips, golden
+parity with the pre-refactor implementations, deprecation shims, and the
+perf-regression gate."""
+import json
+import os
+import subprocess
+import sys
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import admm, compression, solver, vr
+from repro.core.schedule import drop_schedule
+from repro.core.topology import Complete, Exchange, Ring
+from repro.launch.steps import TrainRecipe
+from repro.problems.logistic import LogisticProblem
+
+PROB = LogisticProblem()
+DATA = PROB.make_data(jax.random.key(0))
+TOPO = Ring(PROB.n_agents)
+EX = Exchange(TOPO)
+SGD = vr.PlainSgd(batch_grad=PROB.batch_grad)
+
+
+def _saga():
+    return vr.SagaTable(sample_grad=PROB.sample_grad, m=PROB.m)
+
+
+def _est_for(spec):
+    return _saga() if solver.solver_entry(spec).estimator == "vr" else SGD
+
+
+# spec exercising at least one param (+ nested compressor where supported)
+ROUNDTRIP_SPECS = {
+    "ltadmm": "ltadmm:tau=3,compressor=qbit:bits=8",
+    "dsgd": "dsgd:lr=0.1",
+    "choco": "choco:lr=0.1,compressor=qbit:bits=8",
+    "lead": "lead:lr=0.1,compressor=qbit:bits=8",
+    "cold": "cold:lr=0.1,compressor=randk:fraction=0.5,sampler=block",
+    "cedas": "cedas:lr=0.1,compressor=qbit:bits=4",
+    "dpdc": "dpdc:lr=0.1,compressor=qbit:bits=8",
+}
+
+
+def test_registry_covers_every_method():
+    assert set(solver.SOLVERS) == {
+        "ltadmm", "dsgd", "choco", "lead", "cold", "cedas", "dpdc"
+    }
+    assert set(ROUNDTRIP_SPECS) == set(solver.SOLVERS)
+
+
+@pytest.mark.parametrize("name", sorted(ROUNDTRIP_SPECS))
+def test_spec_roundtrip(name):
+    """Every registered solver builds from its spec string and conforms
+    to the protocol: init/step/consensus/wire accounting/abstract state."""
+    spec = ROUNDTRIP_SPECS[name]
+    s = solver.make_solver(spec, TOPO, EX, _est_for(spec))
+    assert isinstance(s, solver.Solver)
+    assert s.name == name
+
+    x0 = jnp.zeros((PROB.n_agents, PROB.n))
+    st = s.init(x0)
+    st = jax.jit(s.step)(st, DATA, jax.random.key(0))
+    x = s.consensus_params(st)
+    assert jax.tree.leaves(x)[0].shape == (PROB.n_agents, PROB.n)
+    assert all(bool(jnp.all(jnp.isfinite(leaf)))
+               for leaf in jax.tree.leaves(x))
+
+    params = {"w": np.zeros((PROB.n,), np.float32)}
+    wb = s.wire_bytes(params)
+    assert isinstance(wb, int) and wb > 0
+
+    # abstract state matches the real state structure and shapes
+    x_sds = jax.tree.map(
+        lambda t: jax.ShapeDtypeStruct(t.shape, t.dtype), x0
+    )
+    sds = s.abstract_state(x_sds)
+    real_sds = jax.tree.map(
+        lambda t: jax.ShapeDtypeStruct(t.shape, t.dtype), s.init(x0)
+    )
+    assert jax.tree.structure(sds) == jax.tree.structure(real_sds)
+    assert jax.tree.leaves(sds) == jax.tree.leaves(real_sds)
+
+    # sharding hook mirrors the state tree (leaf markers stand in for
+    # PartitionSpecs; edge fields exist only for ltadmm)
+    ps = s.state_sharding("X", "E", "K")
+    assert jax.tree.structure(
+        ps, is_leaf=lambda x: isinstance(x, str)
+    ).num_leaves >= 2
+
+
+def test_ltadmm_solver_absorbs_schedule_dispatch():
+    """One class, both graph kinds: a TopologySchedule flips the state
+    to the per-edge LTADMMScheduleState without caller involvement."""
+    sched = drop_schedule(Complete(PROB.n_agents), p=0.3, seed=0)
+    s = solver.make_solver(
+        "ltadmm:compressor=qbit:bits=8", sched, Exchange(sched.union),
+        _saga(),
+    )
+    st = s.init(jnp.zeros((PROB.n_agents, PROB.n)))
+    assert isinstance(st, admm.LTADMMScheduleState)
+    st = jax.jit(s.step)(st, DATA, jax.random.key(0))
+    assert int(st.k) == 1
+    # schedule-aware wire accounting: exact round < full union graph
+    params = {"w": np.zeros((1000,), np.float32)}
+    full = admm.wire_bytes_per_round(s.cfg, sched.union, params)
+    assert s.wire_bytes(params, t=0) <= full
+    assert s.wire_bytes(params) < full  # period-mean active degree
+
+    static = solver.make_solver(
+        "ltadmm:compressor=qbit:bits=8", TOPO, EX, _saga()
+    )
+    assert isinstance(
+        static.init(jnp.zeros((PROB.n_agents, PROB.n))), admm.LTADMMState
+    )
+
+
+def test_spec_parsing_nested_and_errors():
+    # nested compressor params via plain commas (unknown keys fold into
+    # the preceding compressor value) and via pipes
+    s = solver.make_solver(
+        "ltadmm:compressor=randk:fraction=0.25,sampler=block,tau=7",
+        TOPO, EX, _saga(),
+    )
+    assert s.cfg.tau == 7
+    assert s.cfg.compressor_x == compression.RandK(
+        fraction=0.25, sampler="block"
+    )
+    s2 = solver.make_solver(
+        "ltadmm:tau=7,compressor=randk:fraction=0.25|sampler=block",
+        TOPO, EX, _saga(),
+    )
+    assert s2.cfg == s.cfg
+
+    with pytest.raises(ValueError, match="unknown solver"):
+        solver.make_solver("sgdx:lr=0.1", TOPO, EX, SGD)
+    with pytest.raises(ValueError, match="unknown param"):
+        solver.make_solver("dsgd:learning_rate=0.1", TOPO, EX, SGD)
+
+    # defaults lose to spec params and unsupported keys are dropped
+    s3 = solver.make_solver(
+        "dsgd:lr=0.3", TOPO, EX, SGD,
+        defaults={"lr": 0.1, "compressor": "qbit:bits=8"},
+    )
+    assert s3.lr == 0.3
+
+
+def test_compressor_spec_strings():
+    assert compression.get_compressor("qbit:bits=4") == \
+        compression.BBitQuantizer(bits=4)
+    assert compression.get_compressor("randk:fraction=0.25,sampler=block") \
+        == compression.RandK(fraction=0.25, sampler="block")
+    assert compression.get_compressor("randk:fraction=0.25|sampler=block") \
+        == compression.RandK(fraction=0.25, sampler="block")
+    assert compression.get_compressor("identity") == compression.Identity()
+    # legacy kwargs construction keeps working
+    assert compression.get_compressor("qbit", bits=4) == \
+        compression.BBitQuantizer(bits=4)
+    with pytest.raises(ValueError, match="unknown compressor"):
+        compression.get_compressor("gzip")
+    with pytest.raises(ValueError, match="bad params"):
+        compression.get_compressor("qbit:bitz=4")
+    with pytest.raises(ValueError, match="malformed"):
+        compression.get_compressor("qbit:8bits")
+
+
+# ---------------------------------------------------------------------------
+# Parity with the pre-refactor implementations (captured fixture)
+# ---------------------------------------------------------------------------
+
+GOLD = json.load(open(os.path.join(os.path.dirname(__file__),
+                                   "golden_trajectories.json")))
+PARITY_SPECS = {
+    "dsgd": "dsgd:lr=0.1",
+    "choco": "choco:lr=0.1,compressor=qbit:bits=8",
+    "lead": "lead:lr=0.1,compressor=qbit:bits=8",
+    "cold": "cold:lr=0.1,compressor=qbit:bits=8",
+    "cedas": "cedas:lr=0.1,compressor=qbit:bits=8",
+    "dpdc": "dpdc:lr=0.1,compressor=qbit:bits=8",
+    "ltadmm": "ltadmm:compressor=qbit:bits=8",
+}
+
+
+@pytest.mark.parametrize("name", sorted(PARITY_SPECS))
+def test_golden_parity_with_pre_refactor_trajectories(name):
+    """Each method under the unified API reproduces the gradient-norm
+    trajectory captured from the pre-refactor ad-hoc implementations
+    (tests/golden_trajectories.json; log-space tolerance absorbs
+    cross-jax-version float jitter — bitwise equal on the capture
+    machine)."""
+    spec = PARITY_SPECS[name]
+    s = solver.make_solver(spec, TOPO, EX, _est_for(spec))
+    st = s.init(jnp.zeros((PROB.n_agents, PROB.n)))
+    step = jax.jit(s.step)
+    traj = []
+    for i in range(GOLD["iters"]):
+        st = step(st, DATA, jax.random.key(i))
+        if (i + 1) % GOLD["every"] == 0:
+            xbar = jnp.mean(s.consensus_params(st), axis=0)
+            traj.append(float(PROB.global_grad_norm_sq(xbar, DATA)))
+    got = np.log(np.asarray(traj))
+    want = np.log(np.asarray(GOLD["traj"][name]))
+    np.testing.assert_allclose(got, want, atol=0.5)
+
+
+# ---------------------------------------------------------------------------
+# Deprecation shims
+# ---------------------------------------------------------------------------
+
+
+def test_admm_config_shim_warns_and_matches_registry():
+    recipe = TrainRecipe(tau=3, compressor="qbit:bits=4")
+    with pytest.warns(DeprecationWarning, match="admm_config"):
+        cfg = recipe.admm_config()
+    s = solver.make_solver(
+        "ltadmm", TOPO, EX, _saga(),
+        defaults=recipe.solver_defaults("ltadmm"),
+    )
+    assert cfg == s.cfg
+    # identical config => identical trajectory through the legacy
+    # admm-module entry points vs the unified solver
+    x0 = jnp.zeros((PROB.n_agents, PROB.n))
+    est = _saga()
+    st_old = admm.init(cfg, TOPO, EX, x0)
+    st_new = s.init(x0)
+    for i in range(3):
+        st_old = admm.step(cfg, TOPO, EX, est, st_old, DATA,
+                           jax.random.key(i))
+        st_new = s.step(st_new, DATA, jax.random.key(i))
+    for a, b in zip(jax.tree.leaves(st_old), jax.tree.leaves(st_new)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_comp_kwargs_shim_warns_and_merges():
+    recipe = TrainRecipe(compressor="qbit", comp_kwargs=(("bits", 4),))
+    with pytest.warns(DeprecationWarning, match="comp_kwargs"):
+        spec = recipe.compressor_spec()
+    assert compression.get_compressor(spec) == \
+        compression.BBitQuantizer(bits=4)
+    # no warning on the spec-string form
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        assert TrainRecipe(compressor="qbit:bits=4").compressor_spec() \
+            == "qbit:bits=4"
+
+
+@pytest.mark.slow
+def test_build_admm_train_shim_identical_trajectory():
+    """build_admm_train warns DeprecationWarning and produces the same
+    states/shardings as build_train(..., 'ltadmm', ...) — checked in a
+    4-device subprocess (the builder needs a real agent mesh axis)."""
+    script = os.path.join(os.path.dirname(__file__),
+                          "_solver_shim_check.py")
+    res = subprocess.run(
+        [sys.executable, script],
+        capture_output=True, text=True, timeout=1200,
+        env={**os.environ,
+             "PYTHONPATH": os.pathsep.join(sys.path)},
+    )
+    assert res.returncode == 0, res.stdout + res.stderr
+    assert "SHIM-CHECK OK" in res.stdout, res.stdout
+
+
+# ---------------------------------------------------------------------------
+# Perf-regression gate
+# ---------------------------------------------------------------------------
+
+
+def test_check_regression_thresholds():
+    from benchmarks.check_regression import check
+
+    base = {"results": [{
+        "name": "admm/ring", "rounds_to_tol": 100, "tol": 1e-8,
+        "warm_wall_s": 1.0, "final_gradnorm_sq": 1e-16,
+    }]}
+
+    def pr(**over):
+        r = dict(base["results"][0])
+        r.update(over)
+        return {"results": [r]}
+
+    assert check(pr(), base) == []
+    assert check(pr(rounds_to_tol=120, warm_wall_s=2.0), base) == []
+    assert len(check(pr(rounds_to_tol=200), base)) == 1  # slower to tol
+    assert len(check(pr(rounds_to_tol=None), base)) == 1  # never converges
+    assert len(check(pr(warm_wall_s=4.0), base)) == 1  # wall-time blow-up
+    assert len(check(pr(final_gradnorm_sq=1e-8), base)) == 1  # floor rose
+    assert len(check({"results": []}, base)) == 1  # benchmark dropped
