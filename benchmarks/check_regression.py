@@ -98,6 +98,17 @@ def main() -> None:
               f"{b.get('warm_wall_s')!s:>6s}->{r['warm_wall_s']!s:<6s} "
               f"{r['final_gradnorm_sq']:10.1e}")
 
+    if pr.get("kernels"):
+        # informational only: kernel wall times are interpret-mode on CI
+        # CPU runners and far too noisy to gate, but the trajectory is
+        # worth eyeballing next to the solver numbers
+        base_k = {r["name"]: r for r in base.get("kernels", [])}
+        print(f"\n{'kernel':38s} {'us_per_call':>20s}")
+        for r in pr["kernels"]:
+            b = base_k.get(r["name"], {})
+            print(f"{r['name']:38s} "
+                  f"{b.get('us_per_call')!s:>9s}->{r['us_per_call']!s:<9s}")
+
     failures = check(pr, base)
     if failures:
         print("\nPERF REGRESSION vs committed baseline:", file=sys.stderr)

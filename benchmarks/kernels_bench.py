@@ -1,20 +1,24 @@
 """Kernel microbenchmarks (CPU wall time, interpret mode — structural only;
 the derived column reports achieved vs theoretical wire-compression ratio
-and FLOP counts, which ARE hardware-independent)."""
+and FLOP counts, which ARE hardware-independent).
+
+``run(fast=True)`` times only the communication-path kernels (quantize +
+sparse gather) — the subset the perf-smoke lane folds into
+``BENCH_PR.json`` so kernel timings enter the tracked perf trajectory.
+"""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
 from benchmarks.common import timeit
-from repro.kernels.flash_attention import ops as flash_ops
 from repro.kernels.quantize import ops as q_ops
-from repro.kernels.ssm_scan.kernel import ssd_scan
+from repro.kernels.sparse_gather import ops as sg_ops
 
 KEY = jax.random.key(0)
 
 
-def run(print_rows=True):
+def run(print_rows=True, fast=False):
     rows = []
     # quantize: wire ratio
     x = jax.random.normal(KEY, (1 << 16,))
@@ -27,21 +31,39 @@ def run(print_rows=True):
     rows.append(("kernel/quantize4_64k", us,
                  f"wire_ratio={x.nbytes / payload['q'].nbytes:.2f}"))
 
-    # flash attention: flops
-    b, t, h, dh = 1, 512, 4, 64
-    q = jax.random.normal(KEY, (b, t, h, dh))
-    k = jax.random.normal(KEY, (b, t, 2, dh))
-    v = jax.random.normal(KEY, (b, t, 2, dh))
-    us = timeit(lambda: flash_ops.flash_attention(q, k, v), iters=2)
-    flops = 4 * b * h * t * t * dh / 2  # causal
-    rows.append(("kernel/flash_512", us, f"causal_flops={flops:.3g}"))
+    # sparse gather/scatter: the RandK/TopK packed-plane path
+    k16 = 1 << 14
+    idx = jax.random.permutation(KEY, 1 << 16)[:k16]
+    us = timeit(lambda: sg_ops.sparse_gather(x, idx))
+    rows.append(("kernel/sparse_gather_64k_k16k", us,
+                 f"wire_ratio={(1 << 16) / k16:.2f}"))
+    off = jnp.int32(12345)
+    us = timeit(lambda: sg_ops.cyclic_gather(x, off, k16))
+    rows.append(("kernel/cyclic_gather_64k_k16k", us,
+                 f"wire_ratio={(1 << 16) / k16:.2f}"))
+    vals = x[:k16]
+    us = timeit(lambda: sg_ops.cyclic_scatter(vals, off, 1 << 16, gain=4.0))
+    rows.append(("kernel/cyclic_scatter_64k_k16k", us, "gain=n/k"))
 
-    # ssd scan
-    x2 = jax.random.normal(KEY, (1, 4, 512, 64)) * 0.3
-    al = -jnp.abs(jax.random.normal(KEY, (1, 4, 512))) * 0.2
-    bm = jax.random.normal(KEY, (1, 4, 512, 16)) * 0.3
-    us = timeit(lambda: ssd_scan(x2, al, bm, bm, chunk=128), iters=2)
-    rows.append(("kernel/ssd_512", us, "chunk=128"))
+    if not fast:
+        from repro.kernels.flash_attention import ops as flash_ops
+        from repro.kernels.ssm_scan.kernel import ssd_scan
+
+        # flash attention: flops
+        b, t, h, dh = 1, 512, 4, 64
+        q = jax.random.normal(KEY, (b, t, h, dh))
+        k = jax.random.normal(KEY, (b, t, 2, dh))
+        v = jax.random.normal(KEY, (b, t, 2, dh))
+        us = timeit(lambda: flash_ops.flash_attention(q, k, v), iters=2)
+        flops = 4 * b * h * t * t * dh / 2  # causal
+        rows.append(("kernel/flash_512", us, f"causal_flops={flops:.3g}"))
+
+        # ssd scan
+        x2 = jax.random.normal(KEY, (1, 4, 512, 64)) * 0.3
+        al = -jnp.abs(jax.random.normal(KEY, (1, 4, 512))) * 0.2
+        bm = jax.random.normal(KEY, (1, 4, 512, 16)) * 0.3
+        us = timeit(lambda: ssd_scan(x2, al, bm, bm, chunk=128), iters=2)
+        rows.append(("kernel/ssd_512", us, "chunk=128"))
 
     if print_rows:
         for r in rows:

@@ -57,15 +57,15 @@ def run(print_rows=True):
     rows = []
     for name, (spec, est_kind) in METHODS.items():
         solver = make_solver(spec, topo, ex, _estimator(est_kind, prob))
+        # per-iteration (t_g, t_c) recipe comes from the solver itself:
+        # LT-ADMM charges Table I's last row, each baseline its own
+        # comm_rounds, full-gradient estimators sweep all m components
+        t_iter = solver.round_cost(cm, prob.m)
         if solver.name == "ltadmm":
             rounds, metric_every = ADMM_ROUNDS, 10
-            t_iter = cm.lt_admm_cc(prob.m, solver.cfg.tau)
             seed = 12345
         else:
             rounds, metric_every = BASELINE_ITERS, 50
-            t_iter = cm.per_iteration(
-                solver.name, prob.m, full_grad=(est_kind == "full")
-            )
             seed = 999
         idx, gns = run_solver(prob, data, solver, rounds,
                               metric_every=metric_every, seed=seed)

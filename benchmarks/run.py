@@ -27,10 +27,15 @@ def perf_smoke(out_path: str) -> None:
 
     One static and one time-varying run of the paper-scale convex
     problem (N = 10, 8-bit quantizer, SAGA).  Wall time is reported
-    twice: cold (includes jit compile) and warm (steady-state scan)."""
+    twice: cold (includes jit compile) and warm (steady-state scan).
+    The communication-path kernel microbenchmarks ride along under a
+    ``kernels`` key (informational — the regression gate only acts on
+    ``results``), so kernel timings enter the tracked perf trajectory.
+    """
     import jax
     import numpy as np
 
+    from benchmarks import kernels_bench
     from benchmarks.common import make_problem, run_solver
     from repro.core import vr
     from repro.core.solver import make_solver
@@ -74,6 +79,7 @@ def perf_smoke(out_path: str) -> None:
                 {"x": np.zeros((prob.n,), np.float32)}
             ),
         })
+    kernel_rows = kernels_bench.run(print_rows=False, fast=True)
     payload = {
         "schema": 1,
         "bench": "perf-smoke",
@@ -81,6 +87,10 @@ def perf_smoke(out_path: str) -> None:
         "jax": jax.__version__,
         "python": platform.python_version(),
         "results": results,
+        "kernels": [
+            {"name": name, "us_per_call": round(us, 1), "derived": derived}
+            for name, us, derived in kernel_rows
+        ],
     }
     with open(out_path, "w") as f:
         json.dump(payload, f, indent=2)

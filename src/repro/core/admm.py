@@ -101,6 +101,16 @@ def _slot(tree, s):
     return tree_map(lambda x: x[:, s], tree)
 
 
+_LEAF_STRUCT = jax.tree.structure(0)
+
+
+def _is_packed(x) -> bool:
+    """True when the per-agent parameters are a single flat array (the
+    ``core.packing`` plane) rather than a pytree — selects the
+    slot-batched hot path."""
+    return jax.tree.structure(x) == _LEAF_STRUCT
+
+
 def init(cfg: LTADMMConfig, topo: Topology, exchange: Exchange, x0):
     """x0: params with leading agent axis [A, ...].
 
@@ -248,11 +258,35 @@ def step(
     degrees.
 
     ``topo`` may be a ``schedule.TopologySchedule`` — dispatches to the
-    time-varying round (``step_schedule``).
+    time-varying round (``step_schedule``).  When the per-agent
+    parameters are a single flat array (the ``core.packing`` plane), the
+    round runs slot-batched (``_step_packed``): identical math, one
+    ``[A, S, N]`` expression per update instead of a Python slot loop.
     """
     if hasattr(topo, "round_mask"):
         return step_schedule(cfg, topo, exchange, vr_est, state, data,
                              round_key)
+    if _is_packed(state.x):
+        return _step_packed(cfg, topo, exchange, vr_est, state, data,
+                            round_key)
+    return _step_tree(cfg, topo, exchange, vr_est, state, data, round_key)
+
+
+def _step_tree(
+    cfg: LTADMMConfig,
+    topo: Topology,
+    exchange: Exchange,
+    vr_est,
+    state: LTADMMState,
+    data,
+    round_key,
+):
+    """Pytree-state round: per-leaf compression, Python loop over slots.
+
+    Kept alongside the packed path for models whose parameter plane must
+    stay a pytree (per-leaf compression scales, tensor-parallel leaf
+    shardings); bit-identical to ``_step_packed`` on single-leaf trees
+    (pinned by tests/test_packing.py)."""
     A = topo.n_agents
     agent_ids = jnp.arange(A)
     like = _like_per_agent(state.x)
@@ -364,6 +398,125 @@ def step(
 
 
 # ---------------------------------------------------------------------------
+# Packed-plane hot path (core.packing): slot-batched [A, S, N] round
+# ---------------------------------------------------------------------------
+
+
+def _edge_mask(mask) -> jnp.ndarray | None:
+    """[A, S] slot mask -> broadcastable [A, S, 1] (None when all-active,
+    so fully-regular graphs pay no select at all)."""
+    if bool(np.all(mask)):
+        return None
+    return jnp.asarray(mask)[:, :, None]
+
+
+def _masked(arr, mask3):
+    return arr if mask3 is None else jnp.where(mask3, arr, 0.0)
+
+
+def _step_packed(
+    cfg: LTADMMConfig,
+    topo: Topology,
+    exchange: Exchange,
+    vr_est,
+    state: LTADMMState,
+    data,
+    round_key,
+):
+    """Slot-batched round on the packed plane: state leaves are single
+    arrays (x: ``[A, N]``, edge state: ``[A, S, N]``).
+
+    Same math as ``_step_tree`` — each per-slot ``tree_map`` becomes one
+    vectorized expression over the slot axis, each per-slot compression
+    loop one ``vmap`` over (agent, slot), and the whole z-exchange ONE
+    batched routing call — so the compiled program is a handful of fused
+    ops per round instead of O(slots x leaves) small ones."""
+    A, S = topo.n_agents, topo.n_slots
+    agent_ids = jnp.arange(A)
+    aid2 = jnp.broadcast_to(agent_ids[:, None], (A, S))
+    like = jax.ShapeDtypeStruct(state.x.shape[1:], state.x.dtype)
+    cx, cz = cfg.compressor_x, cfg.compressor_z
+    nbr = jnp.asarray(topo.neighbor_table())  # [A, S]
+    mask3 = _edge_mask(topo.slot_mask())
+
+    # ---- 1. local training ------------------------------------------------
+    x_new = local_phase(cfg, topo, vr_est, state.x, state.z, data, round_key)
+
+    # ---- 2-4. sender-side error feedback for x ----------------------------
+    u_new = (
+        state.x_hat
+        if cfg.lean
+        else tree_lerp(state.u, state.x_hat, cfg.eta)
+    )
+
+    def compress_x(aid, delta):
+        kx = _key_x(round_key, aid)
+        p = compression.compress_tree(cx, kx, delta)
+        return p, compression.decompress_tree(cx, kx, p, like)
+
+    m_x, dx = jax.vmap(compress_x)(agent_ids, x_new - u_new)
+    x_hat_new = u_new + dx
+
+    # ---- 5-6. sender-side error feedback for z (all slots at once) --------
+    def compress_z(aid, nid, delta):
+        kz = _key_z(round_key, aid, nid)
+        p = compression.compress_tree(cz, kz, delta)
+        return p, compression.decompress_tree(cz, kz, p, like)
+
+    m_z, rec_z = jax.vmap(jax.vmap(compress_z))(aid2, nbr, state.z - state.s)
+    z_hat_own = _masked(state.s + rec_z, mask3)
+
+    # ---- the only cross-agent communication -------------------------------
+    recv_x = exchange.gather_batched(m_x)  # payload leaves [A, S, ...]
+    recv_z = exchange.exchange_batched(m_z)
+
+    # ---- 7. receiver-side mirrors -----------------------------------------
+    u_nbr_new = (
+        state.x_hat_nbr
+        if cfg.lean
+        else tree_lerp(state.u_nbr, state.x_hat_nbr, cfg.eta)
+    )
+
+    def decomp_x(sid, payload):
+        return compression.decompress_tree(
+            cx, _key_x(round_key, sid), payload, like
+        )
+
+    x_hat_nbr_new = u_nbr_new + jax.vmap(jax.vmap(decomp_x))(nbr, recv_x)
+
+    def decomp_z(sid, rid, payload):
+        return compression.decompress_tree(
+            cz, _key_z(round_key, sid, rid), payload, like
+        )
+
+    z_hat_nbr = _masked(
+        state.s_tilde + jax.vmap(jax.vmap(decomp_z))(nbr, aid2, recv_z),
+        mask3,
+    )
+
+    # ---- 8. z update, eq. (4) — one fused [A, S, N] expression ------------
+    rrho = cfg.r * cfg.rho
+    z_new = _masked(
+        0.5 * (z_hat_own - z_hat_nbr)
+        + rrho * x_new[:, None]
+        - rrho * (x_hat_new[:, None] - x_hat_nbr_new),
+        mask3,
+    )
+
+    return LTADMMState(
+        x=x_new,
+        x_hat=x_hat_new,
+        u=None if cfg.lean else u_new,
+        z=z_new,
+        s=z_hat_own,
+        s_tilde=z_hat_nbr,
+        x_hat_nbr=x_hat_nbr_new,
+        u_nbr=None if cfg.lean else u_nbr_new,
+        k=state.k + 1,
+    )
+
+
+# ---------------------------------------------------------------------------
 # Time-varying topologies (schedule.TopologySchedule)
 # ---------------------------------------------------------------------------
 #
@@ -432,8 +585,25 @@ def step_schedule(
     The compiled program is static: every union slot always moves a
     payload through the exchange; ``sched.round_mask(state.k)`` (one
     gather on the periodic mask stack) selects, per agent and slot,
-    whether the advanced state or the held state is kept.
+    whether the advanced state or the held state is kept.  Packed-plane
+    states (single-array leaves) take the slot-batched fast path.
     """
+    if _is_packed(state.x):
+        return _step_schedule_packed(cfg, sched, exchange, vr_est, state,
+                                     data, round_key)
+    return _step_schedule_tree(cfg, sched, exchange, vr_est, state, data,
+                               round_key)
+
+
+def _step_schedule_tree(
+    cfg: LTADMMConfig,
+    sched,
+    exchange: Exchange,
+    vr_est,
+    state: LTADMMScheduleState,
+    data,
+    round_key,
+):
     topo = sched.union
     A = topo.n_agents
     agent_ids = jnp.arange(A)
@@ -555,6 +725,106 @@ def step_schedule(
         s_tilde=_stack_slots(tuple(s_tilde_new)),
         x_hat_nbr=_stack_slots(tuple(x_hat_nbr_new)),
         u_nbr=None if cfg.lean else _stack_slots(tuple(u_nbr_new)),
+        k=state.k + 1,
+    )
+
+
+def _step_schedule_packed(
+    cfg: LTADMMConfig,
+    sched,
+    exchange: Exchange,
+    vr_est,
+    state: LTADMMScheduleState,
+    data,
+    round_key,
+):
+    """Slot-batched time-varying round on the packed plane (same
+    asynchronous-ADMM semantics as ``_step_schedule_tree``): the round's
+    ``[A, S]`` activity mask gates one select per state field instead of
+    a per-slot Python loop, and both exchanges are single batched
+    routing calls on the union slots."""
+    topo = sched.union
+    A, S = topo.n_agents, topo.n_slots
+    agent_ids = jnp.arange(A)
+    aid2 = jnp.broadcast_to(agent_ids[:, None], (A, S))
+    like = jax.ShapeDtypeStruct(state.x.shape[1:], state.x.dtype)
+    cx, cz = cfg.compressor_x, cfg.compressor_z
+    nbr = jnp.asarray(topo.neighbor_table())
+    act = sched.round_mask(state.k)[:, :, None]  # [A, S, 1] traced bool
+
+    # ---- 1. local training: union degrees + full held dual sum ------------
+    x_new = local_phase(cfg, topo, vr_est, state.x, state.z, data, round_key)
+
+    # ---- 2-4. per-edge sender-side error feedback for x -------------------
+    xh = state.x_hat_edge  # [A, S, N]
+    u_adv = xh if cfg.lean else tree_lerp(state.u_edge, xh, cfg.eta)
+
+    def compress_xe(aid, nid, delta):
+        kx = _key_xe(round_key, aid, nid)
+        p = compression.compress_tree(cx, kx, delta)
+        return p, compression.decompress_tree(cx, kx, p, like)
+
+    m_x, rec_x = jax.vmap(jax.vmap(compress_xe))(
+        aid2, nbr, x_new[:, None] - u_adv
+    )
+    x_hat_edge_new = jnp.where(act, u_adv + rec_x, xh)
+    u_edge_new = (
+        None if cfg.lean else jnp.where(act, u_adv, state.u_edge)
+    )
+
+    # ---- 5-6. sender-side error feedback for z (gated below) --------------
+    def compress_z(aid, nid, delta):
+        kz = _key_z(round_key, aid, nid)
+        p = compression.compress_tree(cz, kz, delta)
+        return p, compression.decompress_tree(cz, kz, p, like)
+
+    m_z, rec_z = jax.vmap(jax.vmap(compress_z))(aid2, nbr, state.z - state.s)
+    z_hat_own = state.s + rec_z
+
+    # ---- the only cross-agent communication (all slots, every round) ------
+    recv_x = exchange.exchange_batched(m_x)
+    recv_z = exchange.exchange_batched(m_z)
+
+    # ---- 7. receiver-side mirrors, gated by the same mask -----------------
+    xhn = state.x_hat_nbr
+    un_adv = xhn if cfg.lean else tree_lerp(state.u_nbr, xhn, cfg.eta)
+
+    def decomp_xe(sid, rid, payload):
+        return compression.decompress_tree(
+            cx, _key_xe(round_key, sid, rid), payload, like
+        )
+
+    xhn_adv = un_adv + jax.vmap(jax.vmap(decomp_xe))(nbr, aid2, recv_x)
+    x_hat_nbr_new = jnp.where(act, xhn_adv, xhn)
+    u_nbr_new = (
+        None if cfg.lean else jnp.where(act, un_adv, state.u_nbr)
+    )
+
+    def decomp_z(sid, rid, payload):
+        return compression.decompress_tree(
+            cz, _key_z(round_key, sid, rid), payload, like
+        )
+
+    z_hat_nbr = state.s_tilde + jax.vmap(jax.vmap(decomp_z))(
+        nbr, aid2, recv_z
+    )
+
+    # ---- 8. z / s / s̃ updates on active edges only (held elsewhere) ------
+    rrho = cfg.r * cfg.rho
+    z_eq4 = (
+        0.5 * (z_hat_own - z_hat_nbr)
+        + rrho * x_new[:, None]
+        - rrho * (x_hat_edge_new - x_hat_nbr_new)
+    )
+    return LTADMMScheduleState(
+        x=x_new,
+        x_hat_edge=x_hat_edge_new,
+        u_edge=u_edge_new,
+        z=jnp.where(act, z_eq4, state.z),
+        s=jnp.where(act, z_hat_own, state.s),
+        s_tilde=jnp.where(act, z_hat_nbr, state.s_tilde),
+        x_hat_nbr=x_hat_nbr_new,
+        u_nbr=u_nbr_new,
         k=state.k + 1,
     )
 

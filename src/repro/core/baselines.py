@@ -39,7 +39,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.common.trees import tree_map, tree_sub, tree_zeros_like
-from repro.core import compression
+from repro.core import compression, packing, vr
 from repro.core.schedule import TopologySchedule, metropolis_schedule
 from repro.core.topology import Topology, metropolis_weights
 
@@ -109,7 +109,15 @@ class GossipSolverMixin:
     """Shared ``Solver``-protocol behavior of the single-loop gossip
     baselines.  Subclasses declare ``state_fields`` (the param-shaped
     entries of their state dict, ``"x"`` first) and ``comm_rounds``
-    (communication rounds per iteration, for wire/cost accounting)."""
+    (communication rounds per iteration, for wire/cost accounting).
+
+    ``packed`` (field on every baseline, default on): ``init`` flattens
+    the stacked params onto the contiguous ``[A, N]`` plane of
+    ``core.packing`` — every gossip mix, compression call and EF update
+    then runs on ONE array instead of per pytree leaf — and
+    ``consensus_params`` unpacks back.  Bit-identical on flat problems;
+    multi-leaf models get whole-plane compression granularity (same
+    trade as ``LTADMMSolver.packed``)."""
 
     state_fields: tuple = ("x",)
     comm_rounds: int = 1
@@ -121,9 +129,23 @@ class GossipSolverMixin:
         graph (``Topology`` or ``TopologySchedule``) the solver runs on."""
         return self.topo
 
+    # ---- packed-plane plumbing --------------------------------------------
+
+    def _layout_for_state(self, state) -> packing.PackedLayout:
+        return packing.cached_layout(self, state["x"])
+
+    def _estimator(self, state):
+        if getattr(self, "packed", False):
+            return packing.PackedEstimator(
+                self.grad_est, self._layout_for_state(state)
+            )
+        return self.grad_est
+
     # ---- consensus / accounting hooks -------------------------------------
 
     def consensus_params(self, state):
+        if getattr(self, "packed", False):
+            return packing.unpack(self._layout_for_state(state), state["x"])
         return state["x"]
 
     def _wire_compressor(self):
@@ -135,13 +157,23 @@ class GossipSolverMixin:
         """Bytes the busiest agent transmits per iteration (one message
         per incident edge per communication round).  For a
         ``TopologySchedule``, ``t=None`` charges the period-mean active
-        degree; an explicit ``t`` gives the exact round."""
+        degree; an explicit ``t`` gives the exact round.  Packed solvers
+        charge one whole-plane message (one scale / index set)."""
+        if getattr(self, "packed", False):
+            params = packing.abstract_plane(packing.layout_of(params))
         per_edge = compression.tree_wire_bytes(
             self._wire_compressor(), params
         ) * self.comm_rounds
         if t is not None and isinstance(self.topo, TopologySchedule):
             return int(np.max(self.topo.round_degrees(t))) * per_edge
         return int(round(float(np.max(self.topo.degrees())) * per_edge))
+
+    def round_cost(self, cost_model, m: int) -> float:
+        """(t_g, t_c) cost of ONE iteration: gradient evaluations follow
+        the bound estimator (``vr.FullGrad`` sweeps all m components),
+        communication charges ``comm_rounds`` rounds."""
+        n_grad = m if isinstance(self.grad_est, vr.FullGrad) else 1
+        return n_grad * cost_model.t_g + self.comm_rounds * cost_model.t_comm
 
     # ---- sharding / lowering hooks ----------------------------------------
 
@@ -163,6 +195,11 @@ class GossipSolverMixin:
     # ---- uniform init/step ------------------------------------------------
 
     def init(self, x0):
+        if getattr(self, "packed", False):
+            x0 = packing.pack(
+                packing.cache_layout(self, packing.layout_of_stacked(x0)),
+                x0,
+            )
         st = self._init(x0)
         st["k"] = jnp.zeros((), jnp.int32)
         return st
@@ -174,7 +211,8 @@ class GossipSolverMixin:
         )
         k = state["k"]
         st = self._step(
-            {f: state[f] for f in self.state_fields}, data, key, k
+            {f: state[f] for f in self.state_fields}, data, key, k,
+            self._estimator(state),
         )
         st["k"] = k + 1
         return st
@@ -193,13 +231,14 @@ class DSGD(GossipSolverMixin):
     lr: float = 0.05
     batch_size: int = 1
     grad_est: Any = None
+    packed: bool = True
     name: str = "dsgd"
 
     def _init(self, x0):
         return {"x": x0}
 
-    def _step(self, state, data, key, k):
-        g = _sample_grads(self.grad_est, state["x"], data, key,
+    def _step(self, state, data, key, k, est):
+        g = _sample_grads(est, state["x"], data, key,
                           self.batch_size)
         x = gossip(self.topo, state["x"], k)
         x = tree_map(lambda a, b: a - self.lr * b, x, g)
@@ -219,6 +258,7 @@ class ChocoSGD(GossipSolverMixin):
     compressor: Any = compression.Identity()
     batch_size: int = 1
     grad_est: Any = None
+    packed: bool = True
     name: str = "choco"
 
     state_fields = ("x", "xhat")
@@ -226,9 +266,9 @@ class ChocoSGD(GossipSolverMixin):
     def _init(self, x0):
         return {"x": x0, "xhat": tree_zeros_like(x0)}
 
-    def _step(self, state, data, key, k):
+    def _step(self, state, data, key, k, est):
         x, xhat = state["x"], state["xhat"]
-        g = _sample_grads(self.grad_est, x, data, key, self.batch_size)
+        g = _sample_grads(est, x, data, key, self.batch_size)
         x = tree_map(lambda a, b: a - self.lr * b, x, g)
         q = _compress_stacked(
             self.compressor, jax.random.fold_in(key, 1),
@@ -256,6 +296,7 @@ class LEAD(GossipSolverMixin):
     compressor: Any = compression.Identity()
     batch_size: int = 1
     grad_est: Any = None
+    packed: bool = True
     name: str = "lead"
 
     state_fields = ("x", "h", "d")
@@ -267,9 +308,9 @@ class LEAD(GossipSolverMixin):
             "d": tree_zeros_like(x0),
         }
 
-    def _step(self, state, data, key, k):
+    def _step(self, state, data, key, k, est):
         x, h, d = state["x"], state["h"], state["d"]
-        g = _sample_grads(self.grad_est, x, data, key, self.batch_size)
+        g = _sample_grads(est, x, data, key, self.batch_size)
         y = tree_map(lambda a, b, c: a - self.lr * (b + c), x, g, d)
         q = _compress_stacked(
             self.compressor, jax.random.fold_in(key, 1),
@@ -300,6 +341,7 @@ class COLD(GossipSolverMixin):
     compressor: Any = compression.Identity()
     batch_size: int = 1
     grad_est: Any = None
+    packed: bool = True
     name: str = "cold"
 
     state_fields = ("x", "h", "d")
@@ -311,9 +353,9 @@ class COLD(GossipSolverMixin):
             "d": tree_zeros_like(x0),
         }
 
-    def _step(self, state, data, key, k):
+    def _step(self, state, data, key, k, est):
         x, h, d = state["x"], state["h"], state["d"]
-        g = _sample_grads(self.grad_est, x, data, key, self.batch_size)
+        g = _sample_grads(est, x, data, key, self.batch_size)
         y = tree_map(lambda a, b, c: a - self.lr * (b + c), x, g, d)
         q = _compress_stacked(
             self.compressor, jax.random.fold_in(key, 1),
@@ -342,6 +384,7 @@ class CEDAS(GossipSolverMixin):
     compressor: Any = compression.Identity()
     batch_size: int = 1
     grad_est: Any = None
+    packed: bool = True
     name: str = "cedas"
 
     state_fields = ("x", "psi_prev", "xhat")
@@ -350,9 +393,9 @@ class CEDAS(GossipSolverMixin):
     def _init(self, x0):
         return {"x": x0, "psi_prev": x0, "xhat": tree_zeros_like(x0)}
 
-    def _step(self, state, data, key, k):
+    def _step(self, state, data, key, k, est):
         x, psi_prev, xhat = state["x"], state["psi_prev"], state["xhat"]
-        g = _sample_grads(self.grad_est, x, data, key, self.batch_size)
+        g = _sample_grads(est, x, data, key, self.batch_size)
         psi = tree_map(lambda a, b: a - self.lr * b, x, g)
         mix_in = tree_map(lambda p, a, pp: p + a - pp, psi, x, psi_prev)
         q = _compress_stacked(
@@ -385,6 +428,7 @@ class DPDC(GossipSolverMixin):
     compressor: Any = compression.Identity()
     batch_size: int = 1
     grad_est: Any = None
+    packed: bool = True
     name: str = "dpdc"
 
     state_fields = ("x", "v", "xhat")
@@ -393,9 +437,9 @@ class DPDC(GossipSolverMixin):
         return {"x": x0, "v": tree_zeros_like(x0),
                 "xhat": tree_zeros_like(x0)}
 
-    def _step(self, state, data, key, k):
+    def _step(self, state, data, key, k, est):
         x, v, xhat = state["x"], state["v"], state["xhat"]
-        g = _sample_grads(self.grad_est, x, data, key, self.batch_size)
+        g = _sample_grads(est, x, data, key, self.batch_size)
         q = _compress_stacked(
             self.compressor, jax.random.fold_in(key, 1),
             tree_sub(x, xhat), _like(x),

@@ -25,6 +25,15 @@ Implemented compressors:
 All compressors are unbiased with E||C(x)-x||^2 <= p ||x||^2 except TopK;
 ``variance_p`` reports the constant p per leaf (used in tests and napkin
 math).
+
+Every compressor accepts ``kernel=true`` in its spec (``"qbit:bits=8,
+kernel=true"``) to run its fused Pallas kernel — ``kernels/quantize``
+for the b-bit quantizer, ``kernels/sparse_gather`` for RandK/TopK.
+RandK/TopK keep their seed-synchronized index derivation, so their
+kernel path is bit-identical; the quantizer's stochastic-rounding
+stream differs (still unbiased).  On the packed plane
+(``core.packing``) each message is ONE leaf, so ``compress_tree`` is a
+single fused call.
 """
 from __future__ import annotations
 
@@ -49,6 +58,9 @@ def _flat(x):
 
 @dataclasses.dataclass(frozen=True)
 class Identity:
+    # kernel is accepted (and ignored — there is nothing to fuse) so the
+    # `kernel=true` spec param works uniformly across every compressor
+    kernel: bool = False
     name: str = "identity"
     unbiased: bool = True
 
@@ -74,9 +86,18 @@ class BBitQuantizer:
 
     C(x) = (||x||_inf / s) * sign(x) ∘ floor(s |x| / ||x||_inf + kappa),
     kappa ~ U[0,1)^n  =>  E[C(x)] = x  (unbiased for any s >= 1).
+
+    ``kernel=True`` (spec: ``qbit:bits=8,kernel=true``) routes
+    compress/decompress through the fused Pallas pipeline in
+    ``repro.kernels.quantize`` — compiled on TPU, interpret elsewhere.
+    Same quantizer family and wire format; the stochastic-rounding
+    stream differs (raw uint32 bits vs ``jax.random.uniform``), so the
+    kernel path is unbiased and contractive but not bit-identical to
+    the jnp path.
     """
 
     bits: int = 8
+    kernel: bool = False
     name: str = "qbit"
     unbiased: bool = True
 
@@ -88,6 +109,10 @@ class BBitQuantizer:
         return 2 ** (self.bits - 1) - 1
 
     def compress(self, key, x) -> Payload:
+        if self.kernel:
+            from repro.kernels.quantize import ops as qops
+
+            return qops.quantize_tensor(key, x, bits=self.bits)
         xf = _flat(x).astype(jnp.float32)
         scale = jnp.maximum(jnp.max(jnp.abs(xf)), jnp.finfo(jnp.float32).tiny)
         kappa = jax.random.uniform(key, xf.shape)
@@ -101,6 +126,12 @@ class BBitQuantizer:
 
     def decompress(self, key, payload, like) -> jax.Array:
         del key
+        if self.kernel:
+            from repro.kernels.quantize import ops as qops
+
+            return qops.dequantize_tensor(
+                payload, like.shape, dtype=like.dtype, bits=self.bits
+            )
         q = payload["q"]
         n = math.prod(like.shape)
         if self.bits == 4:
@@ -154,29 +185,52 @@ class RandK:
 
     fraction: float = 0.25
     sampler: str = "uniform"
+    kernel: bool = False
     name: str = "randk"
     unbiased: bool = True
 
     def _k(self, n: int) -> int:
         return max(1, int(round(self.fraction * n)))
 
+    def _offset(self, key, n: int):
+        return jax.random.randint(key, (), 0, n)
+
     def _indices(self, key, n: int):
         k = self._k(n)
         if self.sampler == "uniform":
             perm = jax.random.permutation(key, n)
             return perm[:k]
-        off = jax.random.randint(key, (), 0, n)
-        return (off + jnp.arange(k)) % n
+        return (self._offset(key, n) + jnp.arange(k)) % n
 
     def compress(self, key, x) -> Payload:
         xf = _flat(x)
-        idx = self._indices(key, xf.shape[0])
-        return {"v": jnp.take(xf, idx, axis=0)}
+        n = xf.shape[0]
+        if self.kernel:
+            from repro.kernels.sparse_gather import ops as sg
+
+            if self.sampler == "block":  # fused dynamic-slice window
+                return {"v": sg.cyclic_gather(
+                    xf, self._offset(key, n), self._k(n)
+                )}
+            return {"v": sg.sparse_gather(xf, self._indices(key, n))}
+        return {"v": jnp.take(xf, self._indices(key, n), axis=0)}
 
     def decompress(self, key, payload, like) -> jax.Array:
         n = math.prod(like.shape)
-        idx = self._indices(key, n)
         k = self._k(n)
+        if self.kernel:
+            from repro.kernels.sparse_gather import ops as sg
+
+            if self.sampler == "block":
+                out = sg.cyclic_scatter(
+                    payload["v"], self._offset(key, n), n, gain=n / k
+                )
+            else:
+                out = sg.sparse_scatter(
+                    payload["v"], self._indices(key, n), n, gain=n / k
+                )
+            return jnp.reshape(out, like.shape).astype(like.dtype)
+        idx = self._indices(key, n)
         out = jnp.zeros((n,), payload["v"].dtype)
         out = out.at[idx].set((n / k) * payload["v"])
         return jnp.reshape(out, like.shape).astype(like.dtype)
@@ -199,6 +253,7 @@ class TopK:
     """Biased magnitude top-k (needs indices on the wire: values + int32 idx)."""
 
     fraction: float = 0.25
+    kernel: bool = False
     name: str = "topk"
     unbiased: bool = False
 
@@ -211,11 +266,21 @@ class TopK:
         k = self._k(xf.shape[0])
         v, idx = jax.lax.top_k(jnp.abs(xf), k)
         del v
+        if self.kernel:
+            from repro.kernels.sparse_gather import ops as sg
+
+            return {"v": sg.sparse_gather(xf, idx),
+                    "idx": idx.astype(jnp.int32)}
         return {"v": jnp.take(xf, idx), "idx": idx.astype(jnp.int32)}
 
     def decompress(self, key, payload, like) -> jax.Array:
         del key
         n = math.prod(like.shape)
+        if self.kernel:
+            from repro.kernels.sparse_gather import ops as sg
+
+            out = sg.sparse_scatter(payload["v"], payload["idx"], n)
+            return jnp.reshape(out, like.shape).astype(like.dtype)
         out = jnp.zeros((n,), payload["v"].dtype)
         out = out.at[payload["idx"]].set(payload["v"])
         return jnp.reshape(out, like.shape).astype(like.dtype)

@@ -38,8 +38,15 @@ class CostModel:
                    mean_degree=float(np.mean(topo.degrees())))
 
     @property
-    def _tc(self) -> float:
+    def t_comm(self) -> float:
+        """Effective cost of one communication round on this graph
+        (degree-aware t_c) — what the per-solver ``round_cost`` hooks
+        charge per ``comm_rounds``."""
         return self.t_c * self.mean_degree / 2.0
+
+    @property
+    def _tc(self) -> float:
+        return self.t_comm
 
     def lt_admm_cc(self, m: int, tau: int) -> float:
         """(m + tau - 1) t_g + 2 t_c  — Table I last row.
@@ -66,11 +73,18 @@ class CostModel:
         return tau * (self.t_g + self._tc)
 
     def per_iteration(self, algo: str, m: int, full_grad: bool = False):
-        """Cost of ONE iteration of a single-loop baseline."""
-        if algo in ("lead", "dsgd", "choco"):
-            return self.t_g + self._tc
-        if algo == "cedas":
-            return self.t_g + 2 * self._tc
-        if algo in ("cold", "dpdc"):
-            return (m if full_grad else 1) * self.t_g + self._tc
-        raise ValueError(algo)
+        """Cost of ONE iteration of a single-loop baseline.
+
+        DEPRECATED shim: the per-iteration recipe now lives on each
+        solver (``Solver.round_cost(cost_model, m)``) — this name-keyed
+        variant delegates to the registered baseline's ``comm_rounds``
+        and is kept for callers without a solver instance.  ``full_grad``
+        is honored only where the paper runs full-gradient variants
+        (COLD/DPDC), matching the historical hardcoded table.
+        """
+        from repro.core.baselines import ALL_BASELINES
+
+        if algo not in ALL_BASELINES:
+            raise ValueError(algo)
+        n_grad = m if (full_grad and algo in ("cold", "dpdc")) else 1
+        return n_grad * self.t_g + ALL_BASELINES[algo].comm_rounds * self.t_comm

@@ -1,0 +1,226 @@
+"""Packed parameter plane: one contiguous ``[..., N]`` buffer per agent.
+
+The hot path of every solver in this repo is "arithmetic + compression +
+exchange over the model parameters".  Expressed per pytree leaf, a round
+costs hundreds of tiny HLO ops (slots x leaves x compress/decompress);
+expressed on a **packed plane** — each agent's parameter pytree flattened
+once into a single contiguous vector — the same round is a handful of
+fused ops: compression is ONE kernel call per message, the slot loop of
+the ADMM edge update becomes one batched ``[A, S, N]`` expression, and
+the exchange moves one buffer per message.  This is the trick CHOCO-SGD
+style systems use to make compressed gossip cheap in practice, applied
+to the one path every solver here shares.
+
+The layout is **static**: ``PackedLayout`` records the treedef and, per
+leaf, its shape/dtype and the ``[offset, offset + size)`` segment of the
+plane — all host-side metadata, so ``pack``/``unpack`` lower to reshapes
+plus one concatenate / N slices and are free at the XLA level relative
+to the round's math.
+
+Semantics note: operators that act per compression call (the b-bit
+quantizer's inf-norm scale, RandK's ``k = round(fraction * n)``) see the
+WHOLE plane as one vector instead of each leaf separately.  For a
+single-leaf tree (the paper-scale experiments, and anything already
+flat) this is bit-identical to the per-leaf path; for multi-leaf models
+it is the paper's own formulation (the compressor C acts on x in R^n,
+not per tensor) at coarser scale granularity.  Solvers keep the per-leaf
+tree path available behind ``packed=False``.
+
+API::
+
+    layout = layout_of(params_or_sds)       # per-agent tree, no agent axis
+    flat   = pack(layout, tree)             # [..., N]; any leading dims
+    tree   = unpack(layout, flat)           # exact inverse
+    views  = leaf_views(layout, flat)       # alias of unpack (model fwd)
+    est    = PackedEstimator(grad_est, layout)   # vr.* over flat vectors
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class LeafSlot:
+    """One leaf's segment of the plane (static metadata)."""
+
+    shape: tuple
+    dtype: str
+    offset: int
+    size: int
+
+
+@dataclasses.dataclass(frozen=True)
+class PackedLayout:
+    """Static pack/unpack recipe: treedef + per-leaf plane segments.
+
+    Hashable and comparable — safe to close over in jitted functions
+    (two layouts compare equal iff they describe the same packing).
+    """
+
+    treedef: Any
+    slots: tuple  # tuple[LeafSlot, ...] in treedef leaf order
+    size: int  # N, total elements of the plane
+    dtype: str  # common plane dtype (leaves are cast on pack/unpack)
+
+    @property
+    def is_trivial(self) -> bool:
+        """True when the tree already IS a single flat vector — pack and
+        unpack are then pure reshapes (bitwise no-ops)."""
+        return (
+            len(self.slots) == 1
+            and self.slots[0].shape == (self.size,)
+            and self.slots[0].dtype == self.dtype
+        )
+
+
+def layout_of(tree, dtype=None) -> PackedLayout:
+    """Layout of a per-agent parameter tree (arrays or ShapeDtypeStructs;
+    leaves must NOT carry the agent axis — strip it first).
+
+    ``dtype``: plane dtype; defaults to the promotion of all leaf dtypes
+    (a uniform-f32 tree packs to f32 with no casts anywhere).
+    """
+    leaves, treedef = jax.tree.flatten(tree)
+    assert leaves, "cannot build a packed layout for an empty tree"
+    if dtype is None:
+        dtype = jnp.result_type(*[leaf.dtype for leaf in leaves])
+    dtype = jnp.dtype(dtype).name
+    slots, off = [], 0
+    for leaf in leaves:
+        size = 1
+        for d in leaf.shape:
+            size *= int(d)
+        slots.append(
+            LeafSlot(
+                shape=tuple(int(d) for d in leaf.shape),
+                dtype=jnp.dtype(leaf.dtype).name,
+                offset=off,
+                size=size,
+            )
+        )
+        off += size
+    return PackedLayout(
+        treedef=treedef, slots=tuple(slots), size=off, dtype=dtype
+    )
+
+
+def _lead_dims(leaf_shape, slot: LeafSlot):
+    nd = len(leaf_shape) - len(slot.shape)
+    assert nd >= 0 and tuple(leaf_shape[nd:]) == slot.shape, (
+        f"leaf shape {tuple(leaf_shape)} does not end with the layout "
+        f"shape {slot.shape}"
+    )
+    return tuple(leaf_shape[:nd])
+
+
+def pack(layout: PackedLayout, tree):
+    """Tree -> ``[*lead, N]`` plane.  Leaves may carry any common leading
+    dims (none inside a per-agent vmap, ``[A]`` for stacked params,
+    ``[A, S]`` for edge state)."""
+    leaves = layout.treedef.flatten_up_to(tree)
+    parts, lead0 = [], None
+    for leaf, slot in zip(leaves, layout.slots):
+        lead = _lead_dims(leaf.shape, slot)
+        if lead0 is None:
+            lead0 = lead
+        assert lead == lead0, (
+            f"inconsistent leading dims across leaves: {lead} vs {lead0}"
+        )
+        parts.append(
+            jnp.reshape(leaf, lead + (slot.size,)).astype(layout.dtype)
+        )
+    return parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=-1)
+
+
+def unpack(layout: PackedLayout, flat):
+    """``[*lead, N]`` plane -> tree (exact inverse of ``pack``; leaves are
+    cast back to their recorded dtypes)."""
+    assert flat.shape[-1] == layout.size, (flat.shape, layout.size)
+    lead = tuple(flat.shape[:-1])
+    outs = []
+    for slot in layout.slots:
+        seg = jax.lax.slice_in_dim(
+            flat, slot.offset, slot.offset + slot.size, axis=flat.ndim - 1
+        )
+        outs.append(jnp.reshape(seg, lead + slot.shape).astype(slot.dtype))
+    return jax.tree.unflatten(layout.treedef, outs)
+
+
+def leaf_views(layout: PackedLayout, flat):
+    """Per-leaf views of the plane for the model forward — each leaf is a
+    slice + reshape of ``flat`` (XLA aliases these; no copies until a
+    leaf is written)."""
+    return unpack(layout, flat)
+
+
+def abstract_plane(layout: PackedLayout, lead=()):
+    """ShapeDtypeStruct of the plane with the given leading dims."""
+    return jax.ShapeDtypeStruct(tuple(lead) + (layout.size,), layout.dtype)
+
+
+def layout_of_stacked(x0) -> PackedLayout:
+    """Layout from stacked ``[A, ...]`` params (drops the agent axis)."""
+    return layout_of(
+        jax.tree.map(
+            lambda t: jax.ShapeDtypeStruct(t.shape[1:], t.dtype), x0
+        )
+    )
+
+
+_LEAF_STRUCT = jax.tree.structure(0)
+
+
+def cache_layout(owner, layout: PackedLayout) -> PackedLayout:
+    """Stash a layout on a (frozen) solver instance so step/consensus
+    hooks can pack/unpack without being handed the tree again (same
+    pattern as the schedule's mixing-matrix cache)."""
+    object.__setattr__(owner, "_layout", layout)
+    return layout
+
+
+def cached_layout(owner, x_stacked) -> PackedLayout:
+    """The layout cached on ``owner`` by its init/abstract hooks — or,
+    when absent (state restored externally, init never called), the
+    trivial layout recovered from an already-flat ``[A, N]`` plane."""
+    lay = getattr(owner, "_layout", None)
+    if lay is None:
+        assert jax.tree.structure(x_stacked) == _LEAF_STRUCT, (
+            "packed solver received a pytree state without a cached "
+            "layout; call solver.init(x0) first"
+        )
+        lay = cache_layout(
+            owner,
+            layout_of(
+                jax.ShapeDtypeStruct(x_stacked.shape[1:], x_stacked.dtype)
+            ),
+        )
+    return lay
+
+
+@dataclasses.dataclass(frozen=True)
+class PackedEstimator:
+    """A ``vr.*`` gradient estimator lifted to the packed plane.
+
+    ``reset``/``estimate`` receive flat ``[N]`` parameter vectors, unpack
+    them into the model's pytree for the wrapped estimator, and pack the
+    returned gradient.  The estimator's internal state stays a pytree
+    (tables/anchors) — only the parameter/gradient interface is flat.
+    For a trivial layout every hop is a reshape no-op, so wrapping is
+    bitwise-free on already-flat problems.
+    """
+
+    est: Any
+    layout: PackedLayout
+
+    def reset(self, params_flat, data):
+        return self.est.reset(unpack(self.layout, params_flat), data)
+
+    def estimate(self, state, phi_flat, data, idx):
+        g, state = self.est.estimate(
+            state, unpack(self.layout, phi_flat), data, idx
+        )
+        return pack(self.layout, g), state

@@ -39,7 +39,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.common.trees import tree_consensus_error, tree_consensus_mean
-from repro.core import admm, baselines, compression
+from repro.core import admm, baselines, compression, packing
 from repro.core.admm import LTADMMConfig
 from repro.core.schedule import TopologySchedule
 from repro.core.topology import Exchange
@@ -58,6 +58,8 @@ class Solver(Protocol):
     def consensus_params(self, state) -> Any: ...
 
     def wire_bytes(self, params, t: int | None = None) -> int: ...
+
+    def round_cost(self, cost_model, m: int) -> float: ...
 
     def abstract_state(self, x_sds) -> Any: ...
 
@@ -87,12 +89,22 @@ class LTADMMSolver:
     ``Topology`` (``LTADMMState``) or a ``TopologySchedule``
     (``LTADMMScheduleState``, asynchronous-ADMM semantics); callers
     never pick the state class themselves.
+
+    ``packed`` (default on; spec param ``packed=false`` restores the
+    pytree path): ``init`` flattens the stacked params onto one
+    contiguous ``[A, N]`` plane (``core.packing``), every round then
+    runs the slot-batched ``[A, S, N]`` hot path of ``core.admm`` with
+    ONE compression call per message, and ``consensus_params`` unpacks
+    back to the model pytree.  Bit-identical to the tree path on flat
+    problems; on multi-leaf models the compressor sees the whole plane
+    per message (the paper's own granularity) instead of each leaf.
     """
 
     graph: Any  # Topology | TopologySchedule
     exchange: Exchange | None
     grad_est: Any
     cfg: LTADMMConfig = LTADMMConfig()
+    packed: bool = True
     name: str = "ltadmm"
 
     estimator = "vr"  # wants a variance-reduced grad_est (Theorem 1)
@@ -101,32 +113,55 @@ class LTADMMSolver:
     def is_schedule(self) -> bool:
         return isinstance(self.graph, TopologySchedule)
 
+    # ---- packed-plane plumbing --------------------------------------------
+
+    def _layout_for_state(self, state) -> packing.PackedLayout:
+        return packing.cached_layout(self, state.x)
+
     def init(self, x0):
+        if self.packed:
+            x0 = packing.pack(
+                packing.cache_layout(self, packing.layout_of_stacked(x0)),
+                x0,
+            )
         if self.is_schedule:
             return admm.init_schedule(self.cfg, self.graph, self.exchange, x0)
         return admm.init(self.cfg, self.graph, self.exchange, x0)
 
     def step(self, state, data, key):
+        est = self.grad_est
+        if self.packed:
+            est = packing.PackedEstimator(est, self._layout_for_state(state))
         if self.is_schedule:
             return admm.step_schedule(
-                self.cfg, self.graph, self.exchange, self.grad_est, state,
+                self.cfg, self.graph, self.exchange, est, state,
                 data, key,
             )
         return admm.step(
-            self.cfg, self.graph, self.exchange, self.grad_est, state, data,
+            self.cfg, self.graph, self.exchange, est, state, data,
             key,
         )
 
     def consensus_params(self, state):
+        if self.packed:
+            return packing.unpack(self._layout_for_state(state), state.x)
         return state.x
 
     def wire_bytes(self, params, t: int | None = None) -> int:
         """Busiest-agent TX bytes per outer round (x-message + z-message
         per incident edge).  For a schedule, ``t=None`` charges the
-        period-mean active degree; explicit ``t`` is the exact round."""
+        period-mean active degree; explicit ``t`` is the exact round.
+        On the packed plane a message is ONE compressed [N] vector (one
+        scale / one index set), not one per leaf."""
+        if self.packed:
+            params = packing.abstract_plane(packing.layout_of(params))
         if t is not None and self.is_schedule:
             return admm.wire_bytes_at(self.cfg, self.graph, params, t)
         return admm.wire_bytes_per_round(self.cfg, self.graph, params)
+
+    def round_cost(self, cost_model, m: int) -> float:
+        """(t_g, t_c) cost of one outer round — Table I last row."""
+        return cost_model.lt_admm_cc(m, self.cfg.tau)
 
     # ---- sharding / lowering hooks ----------------------------------------
 
@@ -161,6 +196,12 @@ class LTADMMSolver:
         )
 
     def abstract_state(self, x_sds):
+        if self.packed:
+            a = jax.tree.leaves(x_sds)[0].shape[0]
+            lay = packing.cache_layout(
+                self, packing.layout_of_stacked(x_sds)
+            )
+            x_sds = packing.abstract_plane(lay, lead=(a,))
         edge = jax.tree.map(
             lambda s: jax.ShapeDtypeStruct(
                 (s.shape[0], self.graph.n_slots) + s.shape[1:], s.dtype
@@ -279,6 +320,7 @@ _LTADMM_CFG_FIELDS = tuple(
 
 def _make_ltadmm(graph, exchange, grad_est, **kw):
     comp = kw.pop("compressor", None)
+    packed = compression.coerce_param(kw.pop("packed", True))
     if comp is not None:
         comp = _as_compressor(comp)
         kw.setdefault("compressor_x", comp)
@@ -290,7 +332,8 @@ def _make_ltadmm(graph, exchange, grad_est, **kw):
         **{k: compression.coerce_param(v) for k, v in kw.items()}
     )
     return LTADMMSolver(
-        graph=graph, exchange=exchange, grad_est=grad_est, cfg=cfg
+        graph=graph, exchange=exchange, grad_est=grad_est, cfg=cfg,
+        packed=packed,
     )
 
 
@@ -298,11 +341,12 @@ register_solver(
     "ltadmm",
     _make_ltadmm,
     params=_LTADMM_CFG_FIELDS + ("compressor", "compressor_x",
-                                 "compressor_z"),
+                                 "compressor_z", "packed"),
     nested=("compressor", "compressor_x", "compressor_z"),
     estimator="vr",
     doc="LT-ADMM-CC (paper Alg. 1): local VR training + compressed "
-        "x/z exchanges; exact convergence (Theorem 1)",
+        "x/z exchanges; exact convergence (Theorem 1); packed=false "
+        "restores the per-leaf pytree path",
 )
 
 

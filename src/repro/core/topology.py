@@ -509,6 +509,73 @@ class Exchange:
             out.append(self._route(per_slot_trees[rs], nbr[:, s]))
         return tuple(out)
 
+    # ---- slot-batched variants (packed-plane hot path) --------------------
+    #
+    # Same semantics as the tuple-of-slots methods above, but the slot
+    # axis rides INSIDE the arrays (``[A, S, ...]``), so the host path is
+    # one gather for all slots and the mesh path runs its per-slot
+    # ppermutes inside a single shard_map (one program, S collectives).
+
+    def gather_batched(self, per_agent_tree):
+        """Broadcast exchange, slot-batched: leaves ``[A, ...]`` in,
+        ``[A, S, ...]`` out with ``out[i, s] = in[neighbor_table()[i, s]]``
+        (own message on masked slots, as always)."""
+        nbr = self.topo.neighbor_table()
+        if self.axis is None:
+            idx = jnp.asarray(nbr)  # [A, S]
+            return jax.tree.map(
+                lambda x: jnp.take(x, idx, axis=0), per_agent_tree
+            )
+        A, S = self.topo.n_agents, self.topo.n_slots
+        perms = [
+            [(int(nbr[i, s]), i) for i in range(A)] for s in range(S)
+        ]
+
+        def body(tree):
+            outs = [_ppermute_tree(tree, self.axis, p) for p in perms]
+            return jax.tree.map(
+                lambda *xs: jnp.stack(xs, axis=1), *outs
+            )
+
+        return _shard_map(body, self.mesh, self.axis)(per_agent_tree)
+
+    def exchange_batched(self, edge_tree):
+        """Edge-directed exchange, slot-batched: leaves ``[A, S, ...]`` in
+        and out, ``out[i, s] = in[neighbor_table()[i, s],
+        reverse_slot[s]]`` — every slot's swap in ONE gather on the host
+        path (flat ``[A * S]`` index arithmetic)."""
+        nbr = self.topo.neighbor_table()
+        A, S = self.topo.n_agents, self.topo.n_slots
+        rev = self.topo.reverse_slot
+        if self.axis is None:
+            flat_idx = jnp.asarray(
+                nbr * S + np.asarray(rev, dtype=nbr.dtype)[None, :]
+            )  # [A, S]: sender agent * S + sender slot
+
+            def route(x):
+                x2 = jnp.reshape(x, (A * S,) + x.shape[2:])
+                return jnp.take(x2, flat_idx, axis=0)
+
+            return jax.tree.map(route, edge_tree)
+        perms = [
+            [(int(nbr[i, s]), i) for i in range(A)] for s in range(S)
+        ]
+
+        def body(tree):
+            outs = [
+                _ppermute_tree(
+                    jax.tree.map(lambda x: x[:, rev[s]], tree),
+                    self.axis,
+                    perms[s],
+                )
+                for s in range(S)
+            ]
+            return jax.tree.map(
+                lambda *xs: jnp.stack(xs, axis=1), *outs
+            )
+
+        return _shard_map(body, self.mesh, self.axis)(edge_tree)
+
     def _route(self, tree, src_ids):
         """recv[i] = sent[src_ids[i]] — src_ids must be a partial
         permutation extended with self-loops (Topology invariant)."""

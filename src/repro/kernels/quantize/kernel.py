@@ -26,6 +26,15 @@ from jax.experimental import pallas as pl
 BLOCK = 1024  # elements per VMEM tile (multiple of 128 lanes)
 
 
+def resolve_interpret(interpret):
+    """``None`` -> auto by backend: compiled on TPU (where the Mosaic
+    pipeline exists), interpret everywhere else (CPU tests/CI).  Explicit
+    True/False always wins."""
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return bool(interpret)
+
+
 def _quantize8_kernel(x_ref, rnd_ref, scale_ref, q_ref, *, levels):
     x = x_ref[...].astype(jnp.float32)
     scale = scale_ref[0]
@@ -61,11 +70,13 @@ def _dequantize4_kernel(q_ref, scale_ref, x_ref, *, levels):
 
 
 @functools.partial(jax.jit, static_argnames=("bits", "interpret"))
-def quantize(x_flat, rnd_bits, scale, *, bits=8, interpret=True):
+def quantize(x_flat, rnd_bits, scale, *, bits=8, interpret=None):
     """x_flat [n] f32 (n % BLOCK == 0), rnd_bits [n] uint32, scale scalar.
 
-    Returns int8 [n] (b=8) or uint8 [n//2] (b=4).
+    Returns int8 [n] (b=8) or uint8 [n//2] (b=4).  ``interpret=None``
+    auto-selects by backend (compiled on TPU, interpret elsewhere).
     """
+    interpret = resolve_interpret(interpret)
     n = x_flat.shape[0]
     assert n % BLOCK == 0, n
     levels = float(2 ** (bits - 1) - 1)
@@ -104,7 +115,8 @@ def quantize(x_flat, rnd_bits, scale, *, bits=8, interpret=True):
     jax.jit, static_argnames=("bits", "n", "out_dtype", "interpret")
 )
 def dequantize(q, scale, *, bits=8, n=None, out_dtype=jnp.float32,
-               interpret=True):
+               interpret=None):
+    interpret = resolve_interpret(interpret)
     levels = float(2 ** (bits - 1) - 1)
     scale = jnp.reshape(scale, (1,))
     if bits == 8:

@@ -23,18 +23,24 @@ def _pad_to_block(x_flat):
     return x_flat, n
 
 
-def quantize_tensor(key, x, *, bits=8, interpret=True):
-    """Returns payload {"q", "scale"} with kernel-quantized wire data."""
+def quantize_tensor(key, x, *, bits=8, interpret=None):
+    """Returns payload {"q", "scale"} with kernel-quantized wire data.
+
+    All payload entries are arrays (the payload moves through vmapped
+    compression and the neighbor exchange as a pytree); the original
+    element count is recovered from the target shape on dequantize.
+    ``interpret=None`` auto-selects by backend (compiled on TPU,
+    interpret elsewhere)."""
     flat = jnp.reshape(x, (-1,)).astype(jnp.float32)
     scale = jnp.maximum(jnp.max(jnp.abs(flat)), jnp.finfo(jnp.float32).tiny)
-    padded, n = _pad_to_block(flat)
+    padded, _ = _pad_to_block(flat)
     rnd = jax.random.bits(key, (padded.shape[0],), jnp.uint32)
     q = quantize(padded, rnd, scale, bits=bits, interpret=interpret)
-    return {"q": q, "scale": scale, "n": n}
+    return {"q": q, "scale": scale}
 
 
 def dequantize_tensor(payload, shape, dtype=jnp.float32, *, bits=8,
-                      interpret=True):
+                      interpret=None):
     n = math.prod(shape)
     n_padded = payload["q"].shape[0] * (1 if bits == 8 else 2)
     x = dequantize(

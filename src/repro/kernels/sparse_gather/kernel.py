@@ -1,0 +1,157 @@
+"""Pallas TPU kernels: fused sparse gather/scatter on the packed plane.
+
+These are the RandK/TopK compression hot spots of LT-ADMM-CC once the
+parameters live on a packed ``[N]`` plane (``core/packing.py``): compress
+is "pick k of N values", decompress is "scatter k values back into an
+N-zeros plane with a gain".  Two index regimes, two kernel families:
+
+* **cyclic block** (RandK ``sampler="block"``): the k indices are one
+  contiguous window ``(off + j) % n`` at a seeded random offset.  On TPU
+  a modular window is two dynamic slices; both kernels below reduce it
+  to ONE ``pl.ds`` load per tile by reading from a doubled buffer
+  (gather) / writing into a doubled output that the wrapper folds with
+  one add (scatter).  Memory-bound single sweeps — exactly what the
+  VMEM pipeline wants.
+* **arbitrary indices** (RandK ``sampler="uniform"``, TopK): per-tile
+  vector gather ``x_ref[idx]`` / one-shot scatter.  Dynamic vector
+  indexing lowers on recent Mosaic; on older TPU toolchains keep these
+  in interpret mode (the ops wrapper auto-selects interpret off-TPU).
+
+All kernels validate bit-exactly against ``ref.py`` — the index
+derivation stays seed-synchronized with ``core.compression``, so the
+kernel path changes zero math, only op count.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.quantize.kernel import resolve_interpret
+
+BLOCK = 1024  # elements per VMEM tile (multiple of 128 lanes)
+
+
+# ---------------------------------------------------------------------------
+# Arbitrary-index gather / scatter
+# ---------------------------------------------------------------------------
+
+
+def _gather_kernel(idx_ref, x_ref, out_ref):
+    out_ref[...] = x_ref[idx_ref[...]]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def gather(x_pad, idx_pad, *, interpret=None):
+    """out[j] = x_pad[idx_pad[j]] — grid over index tiles, x resident.
+
+    ``idx_pad`` length must be a BLOCK multiple (pad with 0 and slice the
+    result); every index must be in range.
+    """
+    interpret = resolve_interpret(interpret)
+    (k,), (n,) = idx_pad.shape, x_pad.shape
+    assert k % BLOCK == 0, k
+    return pl.pallas_call(
+        _gather_kernel,
+        grid=(k // BLOCK,),
+        in_specs=[
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((k,), x_pad.dtype),
+        interpret=interpret,
+    )(idx_pad, x_pad)
+
+
+def _scatter_kernel(idx_ref, v_ref, gain_ref, out_ref):
+    zeros = jnp.zeros(out_ref.shape, out_ref.dtype)
+    out_ref[...] = zeros.at[idx_ref[...]].set(gain_ref[0] * v_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("n", "interpret"))
+def scatter(values, idx, gain, *, n, interpret=None):
+    """out = zeros(n); out[idx[j]] = gain * values[j] (unique indices).
+
+    Single grid step: the whole plane is materialized in one scatter —
+    right-sized for message planes that fit VMEM; the cyclic variant
+    below is the tiled path.
+    """
+    interpret = resolve_interpret(interpret)
+    (k,) = idx.shape
+    gain = jnp.reshape(jnp.asarray(gain, values.dtype), (1,))
+    return pl.pallas_call(
+        _scatter_kernel,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((k,), lambda i: (0,)),
+            pl.BlockSpec((k,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((n,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((n,), values.dtype),
+        interpret=interpret,
+    )(idx, values, gain)
+
+
+# ---------------------------------------------------------------------------
+# Cyclic-block gather / scatter (RandK block sampler)
+# ---------------------------------------------------------------------------
+
+
+def _cyclic_gather_kernel(off_ref, x2_ref, out_ref):
+    i = pl.program_id(0)
+    out_ref[...] = x2_ref[pl.ds(off_ref[0] + i * BLOCK, BLOCK)]
+
+
+@functools.partial(jax.jit, static_argnames=("k", "interpret"))
+def cyclic_gather(x2, off, *, k, interpret=None):
+    """out[j] = x2[off + j] for j < k_pad — the modular window
+    ``(off + j) % n`` after the wrapper doubles the buffer.  One dynamic
+    slice per tile.
+    """
+    interpret = resolve_interpret(interpret)
+    (n2,) = x2.shape
+    k_pad = -(-k // BLOCK) * BLOCK
+    off = jnp.reshape(off.astype(jnp.int32), (1,))
+    return pl.pallas_call(
+        _cyclic_gather_kernel,
+        grid=(k_pad // BLOCK,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((n2,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((k_pad,), x2.dtype),
+        interpret=interpret,
+    )(off, x2)[:k]
+
+
+def _cyclic_scatter_kernel(off_ref, vp_ref, out_ref, *, base):
+    i = pl.program_id(0)
+    out_ref[...] = vp_ref[pl.ds(i * BLOCK - off_ref[0] + base, BLOCK)]
+
+
+@functools.partial(jax.jit, static_argnames=("n2p", "interpret"))
+def cyclic_scatter(vp, off, *, n2p, interpret=None):
+    """out2[p] = vp[p - off + n2p] over a doubled output plane of length
+    ``n2p`` (vp is zero-padded so every tile is one in-bounds ``pl.ds``
+    read); the wrapper folds ``out2[:n] + out2[n:2n]`` to undo the
+    doubling.
+    """
+    interpret = resolve_interpret(interpret)
+    assert vp.shape[0] == 2 * n2p, (vp.shape, n2p)
+    off = jnp.reshape(off.astype(jnp.int32), (1,))
+    return pl.pallas_call(
+        functools.partial(_cyclic_scatter_kernel, base=n2p),
+        grid=(n2p // BLOCK,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((2 * n2p,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n2p,), vp.dtype),
+        interpret=interpret,
+    )(off, vp)

@@ -1,0 +1,73 @@
+"""Jitted public wrappers: sparse/cyclic gather-scatter on flat planes.
+
+Padding, buffer doubling and gain handling live here; the kernels in
+``kernel.py`` see only aligned shapes.  Exposed to the trainer through
+``core.compression.RandK``/``TopK`` with ``kernel=True`` — the index
+derivation is untouched, so the kernel path is bit-identical to the jnp
+path (validated in tests/test_kernels.py).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.sparse_gather.kernel import (
+    BLOCK,
+    cyclic_gather as _cyclic_gather_kernel,
+    cyclic_scatter as _cyclic_scatter_kernel,
+    gather as _gather_kernel,
+    scatter as _scatter_kernel,
+)
+
+
+def _pad_to(arr, size, fill=0):
+    if arr.shape[0] == size:
+        return arr
+    return jnp.concatenate(
+        [arr, jnp.full((size - arr.shape[0],), fill, arr.dtype)]
+    )
+
+
+def sparse_gather(x, idx, *, interpret=None):
+    """out[j] = x[idx[j]] for arbitrary in-range indices ([k] <- [n])."""
+    k = idx.shape[0]
+    k_pad = -(-k // BLOCK) * BLOCK
+    out = _gather_kernel(
+        x, _pad_to(idx.astype(jnp.int32), k_pad), interpret=interpret
+    )
+    return out[:k]
+
+
+def sparse_scatter(values, idx, n, gain=1.0, *, interpret=None):
+    """zeros(n).at[idx].set(gain * values) for unique in-range indices."""
+    return _scatter_kernel(
+        values, idx.astype(jnp.int32), gain, n=n, interpret=interpret
+    )
+
+
+def cyclic_gather(x, off, k, *, interpret=None):
+    """out[j] = x[(off + j) % n] — RandK block-sampler compress."""
+    n = x.shape[0]
+    off = jnp.mod(off, n)  # doubled-buffer trick assumes off in [0, n)
+    k_pad = -(-k // BLOCK) * BLOCK
+    # doubled buffer: every modular window of length k_pad starting at
+    # off < n is one contiguous in-bounds slice
+    x2 = _pad_to(jnp.concatenate([x, x]), 2 * n + k_pad)
+    return _cyclic_gather_kernel(x2, off, k=k, interpret=interpret)
+
+
+def cyclic_scatter(values, off, n, gain=1.0, *, interpret=None):
+    """zeros(n) with gain * values written at (off + j) % n — RandK
+    block-sampler decompress."""
+    off = jnp.mod(off, n)  # doubled-output trick assumes off in [0, n)
+    k = values.shape[0]
+    n2p = -(-2 * n // BLOCK) * BLOCK
+    gv = (jnp.asarray(gain, values.dtype) * values).astype(values.dtype)
+    vp = jnp.concatenate(
+        [
+            jnp.zeros((n2p,), values.dtype),
+            gv,
+            jnp.zeros((n2p - k,), values.dtype),
+        ]
+    )
+    out2 = _cyclic_scatter_kernel(vp, off, n2p=n2p, interpret=interpret)
+    return out2[:n] + out2[n : 2 * n]

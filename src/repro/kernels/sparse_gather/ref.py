@@ -1,0 +1,23 @@
+"""Pure-jnp oracles for the sparse gather/scatter kernels."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def sparse_gather_ref(x, idx):
+    return jnp.take(x, idx, axis=0)
+
+
+def sparse_scatter_ref(values, idx, n, gain=1.0):
+    return jnp.zeros((n,), values.dtype).at[idx].set(gain * values)
+
+
+def cyclic_gather_ref(x, off, k):
+    n = x.shape[0]
+    return jnp.take(x, (off + jnp.arange(k)) % n, axis=0)
+
+
+def cyclic_scatter_ref(values, off, n, gain=1.0):
+    k = values.shape[0]
+    idx = (off + jnp.arange(k)) % n
+    return jnp.zeros((n,), values.dtype).at[idx].set(gain * values)

@@ -190,10 +190,17 @@ def build_train(arch_def, cfg, mesh, solver_spec: str,
         return solver.step(state, data, jax.random.PRNGKey(seed))
 
     # ---- shardings ---------------------------------------------------------
-    specs = model_specs(arch_def, cfg)
-    pps = shd.param_pspec(mesh, "admm", specs)
-    x_ps = shd.prefix_pspec(pps, aaxis)  # [A, ...]
-    edge_ps = shd.prefix_pspec(pps, aaxis, None)  # [A, S, ...]
+    if getattr(solver, "packed", False):
+        # packed plane: the parameter dim is flattened into one [A, N]
+        # buffer — shard over the agent axis, plane replicated elsewhere
+        # (per-leaf TP shardings need the pytree path: spec packed=false)
+        x_ps = P(aaxis)
+        edge_ps = P(aaxis, None)
+    else:
+        specs = model_specs(arch_def, cfg)
+        pps = shd.param_pspec(mesh, "admm", specs)
+        x_ps = shd.prefix_pspec(pps, aaxis)  # [A, ...]
+        edge_ps = shd.prefix_pspec(pps, aaxis, None)  # [A, S, ...]
     state_ps = solver.state_sharding(x_ps, edge_ps, P())
     return step_fn, state_ps, solver.init, solver
 

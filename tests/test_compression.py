@@ -173,3 +173,98 @@ def test_topk_selects_largest():
     rec = comp.decompress(key, comp.compress(key, x), _sds(x))
     assert rec[1] == -5.0 and rec[3] == 3.0
     assert int(jnp.sum(rec != 0)) == 2
+
+
+# ---------------------------------------------------------------------------
+# Pallas-kernel-backed compressors (kernel=true in the spec)
+# ---------------------------------------------------------------------------
+
+
+def test_kernel_flag_spec_parsing():
+    assert C.get_compressor("qbit:bits=8,kernel=true") == C.BBitQuantizer(
+        bits=8, kernel=True
+    )
+    assert C.get_compressor("randk:fraction=0.5,kernel=true") == C.RandK(
+        fraction=0.5, kernel=True
+    )
+    assert C.get_compressor("qbit:bits=4") == C.BBitQuantizer(bits=4)
+    assert C.get_compressor("qbit").kernel is False  # jnp path by default
+
+
+@pytest.mark.parametrize(
+    "comp",
+    [
+        C.RandK(fraction=0.5, sampler="block", kernel=True),
+        C.RandK(fraction=0.5, sampler="uniform", kernel=True),
+        C.TopK(fraction=0.5, kernel=True),
+    ],
+    ids=["randk_block", "randk_uniform", "topk"],
+)
+def test_sparse_kernel_path_bit_identical(comp):
+    """RandK/TopK keep their index derivation when kernel=True, so the
+    fused Pallas gather/scatter path is bit-identical to the jnp path."""
+    import dataclasses
+
+    jnp_comp = dataclasses.replace(comp, kernel=False)
+    for seed in range(4):
+        key = jax.random.key(seed)
+        x = jax.random.normal(jax.random.fold_in(key, 1), (333,))
+        pk = comp.compress(key, x)
+        pj = jnp_comp.compress(key, x)
+        np.testing.assert_array_equal(np.asarray(pk["v"]),
+                                      np.asarray(pj["v"]))
+        np.testing.assert_array_equal(
+            np.asarray(comp.decompress(key, pk, _sds(x))),
+            np.asarray(jnp_comp.decompress(key, pj, _sds(x))),
+        )
+
+
+def test_quantizer_kernel_path_unbiased_and_bounded():
+    """The kernel quantizer draws its stochastic-rounding stream from raw
+    uint32 bits (not jax.random.uniform), so it is NOT bit-identical to
+    the jnp path — but it must stay unbiased and one-level bounded."""
+    comp = C.BBitQuantizer(bits=8, kernel=True)
+    x = jax.random.normal(jax.random.key(1), (512,))
+    scale = float(jnp.max(jnp.abs(x)))
+
+    def one(seed):
+        key = jax.random.key(seed)
+        return comp.decompress(key, comp.compress(key, x), _sds(x))
+
+    recs = jax.vmap(one)(jnp.arange(300))
+    # one-level error bound, every draw
+    assert float(jnp.max(jnp.abs(recs - x[None]))) <= scale / comp.levels + 1e-5
+    # unbiasedness: the empirical mean approaches x
+    err = float(jnp.max(jnp.abs(jnp.mean(recs, axis=0) - x)))
+    assert err < 5 * scale / comp.levels / np.sqrt(300), err
+
+
+def test_kernel_compressors_run_inside_solver_step():
+    """End-to-end: a packed LT-ADMM round with kernel-backed compression
+    (the fused path the tentpole wires in) stays finite and close to the
+    jnp-path round."""
+    import repro.core.admm as admm
+    import repro.core.vr as vr
+    from repro.core.topology import Exchange, Ring
+    from repro.problems.logistic import LogisticProblem
+
+    prob = LogisticProblem()
+    data = prob.make_data(jax.random.key(0))
+    saga = vr.SagaTable(sample_grad=prob.sample_grad, m=prob.m)
+    topo = Ring(prob.n_agents)
+    ex = Exchange(topo)
+    x0 = jnp.zeros((prob.n_agents, prob.n))
+    outs = {}
+    for kernel in (False, True):
+        comp = C.RandK(fraction=0.6, sampler="block", kernel=kernel)
+        cfg = admm.LTADMMConfig(eta=0.5, compressor_x=comp,
+                                compressor_z=comp)
+        st = admm.init(cfg, topo, ex, x0)
+        step = jax.jit(
+            lambda s, k, cfg=cfg: admm.step(cfg, topo, ex, saga, s, data, k)
+        )
+        for i in range(3):
+            st = step(st, jax.random.key(i))
+        outs[kernel] = np.asarray(st.x)
+    # RandK kernel path is bit-identical => identical trajectories
+    np.testing.assert_allclose(outs[True], outs[False], atol=1e-7)

@@ -9,7 +9,9 @@ from repro.kernels.flash_attention import ops as flash_ops
 from repro.kernels.flash_attention import ref as flash_ref
 from repro.kernels.quantize import ops as q_ops
 from repro.kernels.quantize import ref as q_ref
-from repro.kernels.quantize.kernel import BLOCK
+from repro.kernels.quantize.kernel import BLOCK, resolve_interpret
+from repro.kernels.sparse_gather import ops as sg_ops
+from repro.kernels.sparse_gather import ref as sg_ref
 from repro.kernels.ssm_scan.kernel import ssd_scan
 from repro.kernels.ssm_scan.ref import ssd_scan_ref
 
@@ -42,6 +44,64 @@ def test_quantize_kernel_matches_ref(bits, shape, dtype):
     # quantization error bound: one level
     bound = float(scale) / (2 ** (bits - 1) - 1) + 1e-2
     assert float(jnp.max(jnp.abs(rec - x.astype(jnp.float32)))) <= bound
+
+
+def test_interpret_auto_selects_by_backend():
+    """interpret=None -> interpret everywhere except TPU (this CI is
+    CPU); explicit choices always win."""
+    assert resolve_interpret(None) == (jax.default_backend() != "tpu")
+    assert resolve_interpret(True) is True
+    assert resolve_interpret(False) is False
+
+
+# ---------------------------------------------------------------------------
+# sparse gather / scatter (packed-plane RandK/TopK path)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n,k", [(5, 2), (1000, 250), (4096, 1024), (77, 30)])
+def test_sparse_gather_scatter_match_ref(n, k):
+    x = jax.random.normal(jax.random.fold_in(KEY, n), (n,))
+    idx = jax.random.permutation(jax.random.fold_in(KEY, n + k), n)[:k]
+    np.testing.assert_array_equal(
+        np.asarray(sg_ops.sparse_gather(x, idx)),
+        np.asarray(sg_ref.sparse_gather_ref(x, idx)),
+    )
+    v = jax.random.normal(jax.random.fold_in(KEY, k), (k,))
+    np.testing.assert_array_equal(
+        np.asarray(sg_ops.sparse_scatter(v, idx, n, gain=n / k)),
+        np.asarray(sg_ref.sparse_scatter_ref(v, idx, n, gain=n / k)),
+    )
+
+
+@pytest.mark.parametrize("n,k", [(5, 2), (1000, 250), (2048, 2048)])
+def test_cyclic_gather_scatter_match_ref(n, k):
+    """Block-RandK kernels: every offset, incl. wraparound windows."""
+    x = jax.random.normal(jax.random.fold_in(KEY, n), (n,))
+    v = jax.random.normal(jax.random.fold_in(KEY, k + 1), (k,))
+    for off_v in [0, 1, n // 2, n - 1, max(0, n - k)]:
+        off = jnp.int32(off_v)
+        np.testing.assert_array_equal(
+            np.asarray(sg_ops.cyclic_gather(x, off, k)),
+            np.asarray(sg_ref.cyclic_gather_ref(x, off, k)),
+        )
+        np.testing.assert_array_equal(
+            np.asarray(sg_ops.cyclic_scatter(v, off, n, gain=2.5)),
+            np.asarray(sg_ref.cyclic_scatter_ref(v, off, n, gain=2.5)),
+        )
+
+
+def test_sparse_kernels_compose_with_vmap():
+    """The packed admm path vmaps compression over (agents, slots)."""
+    xs = jax.random.normal(KEY, (3, 4, 500))
+    offs = jax.random.randint(KEY, (3, 4), 0, 500)
+    got = jax.vmap(jax.vmap(
+        lambda xx, oo: sg_ops.cyclic_gather(xx, oo, 125)
+    ))(xs, offs)
+    want = jax.vmap(jax.vmap(
+        lambda xx, oo: sg_ref.cyclic_gather_ref(xx, oo, 125)
+    ))(xs, offs)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,321 @@
+"""Packed parameter plane (core.packing): pack/unpack round-trips and
+golden parity of the packed hot path against the pytree path — for every
+registered solver, every compressor family, and both graph kinds (static
++ ``drop:`` schedule).  On single-leaf trees the two paths must agree to
+float-reassociation precision (the packed rewrite is a pure op-count
+transform); multi-leaf trees agree exactly for the identity compressor
+(whole-plane vs per-leaf granularity only matters under lossy
+compression)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import packing, solver, vr
+from repro.core.schedule import build_graph
+from repro.problems.logistic import LogisticProblem
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised on minimal installs
+    HAVE_HYPOTHESIS = False
+
+KEY = jax.random.key(0)
+
+TREE = {
+    "w": jax.random.normal(KEY, (3, 4)),
+    "b": jax.random.normal(jax.random.fold_in(KEY, 1), (5,)),
+    "blocks": [
+        jax.random.normal(jax.random.fold_in(KEY, 2), (2, 2, 2)),
+        jax.random.normal(jax.random.fold_in(KEY, 3), (1,)),
+    ],
+}
+
+
+# ---------------------------------------------------------------------------
+# pack / unpack round-trips
+# ---------------------------------------------------------------------------
+
+
+def test_roundtrip_exact():
+    lay = packing.layout_of(TREE)
+    assert lay.size == 12 + 5 + 8 + 1
+    flat = packing.pack(lay, TREE)
+    assert flat.shape == (lay.size,)
+    back = packing.unpack(lay, flat)
+    assert jax.tree.structure(back) == jax.tree.structure(TREE)
+    for a, b in zip(jax.tree.leaves(back), jax.tree.leaves(TREE)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("lead", [(), (4,), (4, 3)], ids=["0d", "A", "AS"])
+def test_roundtrip_leading_dims(lead):
+    """pack/unpack commute with any stack of leading axes (per-agent
+    inside vmap, [A] stacked params, [A, S] edge state)."""
+    tree = jax.tree.map(
+        lambda t: jnp.broadcast_to(t, lead + t.shape) + 0.0, TREE
+    )
+    lay = packing.layout_of(TREE)
+    flat = packing.pack(lay, tree)
+    assert flat.shape == lead + (lay.size,)
+    back = packing.unpack(lay, flat)
+    for a, b in zip(jax.tree.leaves(back), jax.tree.leaves(tree)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_trivial_layout_is_reshape_noop():
+    x = jax.random.normal(KEY, (7,))
+    lay = packing.layout_of(x)
+    assert lay.is_trivial
+    np.testing.assert_array_equal(np.asarray(packing.pack(lay, x)),
+                                  np.asarray(x))
+    np.testing.assert_array_equal(np.asarray(packing.unpack(lay, x)),
+                                  np.asarray(x))
+
+
+def test_mixed_dtypes_cast_and_restore():
+    tree = {"f32": jnp.ones((3,), jnp.float32),
+            "bf16": jnp.ones((2,), jnp.bfloat16)}
+    lay = packing.layout_of(tree)
+    assert lay.dtype == "float32"  # promotion
+    back = packing.unpack(lay, packing.pack(lay, tree))
+    assert back["f32"].dtype == jnp.float32
+    assert back["bf16"].dtype == jnp.bfloat16
+
+
+def test_leaf_views_alias_segments():
+    lay = packing.layout_of(TREE)
+    flat = packing.pack(lay, TREE)
+    views = packing.leaf_views(lay, flat)
+    # leaves sit at their recorded [offset, offset+size) segments, in
+    # treedef order — mutating a segment of the plane moves that view
+    leaves = jax.tree.leaves(TREE)
+    w_pos = [i for i, leaf in enumerate(leaves)
+             if leaf.shape == (3, 4)][0]
+    off = lay.slots[w_pos].offset
+    flat2 = flat.at[off].set(123.0)
+    assert float(packing.leaf_views(lay, flat2)["w"][0, 0]) == 123.0
+    assert float(views["w"][0, 0]) == float(TREE["w"][0, 0])
+
+
+def test_layout_mismatch_raises():
+    lay = packing.layout_of(TREE)
+    bad = dict(TREE)
+    bad["w"] = jnp.zeros((3, 5))
+    with pytest.raises(AssertionError, match="does not end"):
+        packing.pack(lay, bad)
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        shapes=st.lists(
+            st.lists(st.integers(1, 4), min_size=0, max_size=3),
+            min_size=1,
+            max_size=5,
+        ),
+        seed=st.integers(0, 2**16),
+    )
+    def test_roundtrip_property(shapes, seed):
+        key = jax.random.key(seed)
+        tree = {
+            f"p{i}": jax.random.normal(jax.random.fold_in(key, i),
+                                       tuple(sh))
+            for i, sh in enumerate(shapes)
+        }
+        lay = packing.layout_of(tree)
+        back = packing.unpack(lay, packing.pack(lay, tree))
+        for a, b in zip(jax.tree.leaves(back), jax.tree.leaves(tree)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# PackedEstimator
+# ---------------------------------------------------------------------------
+
+
+def test_packed_estimator_matches_tree_estimator():
+    """SVRG over dict params == SVRG over the packed plane, bitwise."""
+    prob = LogisticProblem()
+    data_i = jax.tree.map(lambda t: t[0], prob.make_data(KEY))
+
+    def loss(p, batch):
+        return prob.batch_loss(p["a"] + 0.0, batch) + 0.1 * jnp.sum(
+            p["b"] ** 2
+        )
+
+    grad = jax.grad(loss)
+    est = vr.SvrgAnchor(batch_grad=grad, full_grad=grad)
+    params = {"a": jnp.ones((prob.n,)) * 0.1, "b": jnp.ones((2,))}
+    lay = packing.layout_of(params)
+    pest = packing.PackedEstimator(est, lay)
+
+    st_tree = est.reset(params, data_i)
+    st_flat = pest.reset(packing.pack(lay, params), data_i)
+    idx = jnp.asarray([3, 7])
+    g_tree, _ = est.estimate(st_tree, params, data_i, idx)
+    g_flat, _ = pest.estimate(st_flat, packing.pack(lay, params), data_i,
+                              idx)
+    np.testing.assert_array_equal(
+        np.asarray(packing.pack(lay, g_tree)), np.asarray(g_flat)
+    )
+
+
+# ---------------------------------------------------------------------------
+# Packed-vs-tree golden parity through every solver
+# ---------------------------------------------------------------------------
+
+PROB = LogisticProblem()
+DATA = PROB.make_data(jax.random.key(0))
+SGD_TREE = vr.PlainSgd(
+    batch_grad=lambda p, b: {"w": PROB.batch_grad(p["w"], b)}
+)
+
+
+def _saga_tree():
+    return vr.SagaTable(
+        sample_grad=lambda p, s: {"w": PROB.sample_grad(p["w"], s)},
+        m=PROB.m,
+    )
+
+
+def _est_for(spec):
+    return (_saga_tree()
+            if solver.solver_entry(spec).estimator == "vr" else SGD_TREE)
+
+
+def _run(spec, graph_spec, packed, rounds=3):
+    """Run ``spec`` over dict params {"w": [A, n]}: ``packed=True``
+    flattens onto the plane, ``packed=False`` keeps the pytree path."""
+    graph, ex = build_graph(graph_spec, PROB.n_agents)
+    s = solver.make_solver(
+        f"{spec}{',' if ':' in spec else ':'}packed={str(packed).lower()}",
+        graph, ex, _est_for(spec),
+    )
+    assert s.packed is packed
+    st = s.init({"w": jnp.zeros((PROB.n_agents, PROB.n))})
+    step = jax.jit(s.step)
+    for i in range(rounds):
+        st = step(st, DATA, jax.random.key(i))
+    return s.consensus_params(st)
+
+
+PARITY_SOLVERS = {
+    "ltadmm": "ltadmm:tau=2,compressor={c}",
+    "dsgd": "dsgd:lr=0.1",  # no compressor param
+    "choco": "choco:lr=0.1,compressor={c}",
+    "lead": "lead:lr=0.1,compressor={c}",
+    "cold": "cold:lr=0.1,compressor={c}",
+    "cedas": "cedas:lr=0.1,compressor={c}",
+    "dpdc": "dpdc:lr=0.1,compressor={c}",
+}
+PARITY_COMPRESSORS = {
+    "identity": "identity",
+    "q8": "qbit:bits=8",
+    "q4": "qbit:bits=4",
+    "randk": "randk:fraction=0.6|sampler=block",
+    "topk": "topk:fraction=0.6",
+}
+PARITY_GRAPHS = {
+    "static": "ring",
+    "drop": "drop:p=0.3,base=complete,seed=0",
+}
+
+
+@pytest.mark.parametrize("graph", sorted(PARITY_GRAPHS))
+@pytest.mark.parametrize("comp", sorted(PARITY_COMPRESSORS))
+@pytest.mark.parametrize("name", sorted(PARITY_SOLVERS))
+def test_packed_matches_tree_path(name, comp, graph):
+    """THE acceptance property of the packed rewrite: identical
+    trajectories to the per-leaf pytree path on a flat parameter plane,
+    for every solver x compressor x (static, drop:) schedule."""
+    if name == "dsgd" and comp != "identity":
+        pytest.skip("dsgd is the uncompressed reference")
+    if name == "ltadmm" and comp in ("randk", "topk"):
+        spec = PARITY_SOLVERS[name].format(c=PARITY_COMPRESSORS[comp])
+        spec += ",eta=0.5"  # EF contraction needs eta < 2/p
+    else:
+        spec = PARITY_SOLVERS[name].format(c=PARITY_COMPRESSORS[comp])
+    x_packed = _run(spec, PARITY_GRAPHS[graph], packed=True)
+    x_tree = _run(spec, PARITY_GRAPHS[graph], packed=False)
+    np.testing.assert_allclose(
+        np.asarray(x_packed["w"]), np.asarray(x_tree["w"]),
+        atol=1e-6, rtol=1e-6,
+    )
+
+
+def test_packed_multileaf_identity_parity():
+    """Multi-leaf params through the plane: exact parity under identity
+    compression (pack/unpack + slot batching change no math; only lossy
+    compressors see the granularity difference)."""
+    two_leaf = lambda f: lambda p, b: {  # noqa: E731
+        "w1": f(jnp.concatenate([p["w1"], p["w2"]], -1), b)[..., :3],
+        "w2": f(jnp.concatenate([p["w1"], p["w2"]], -1), b)[..., 3:],
+    }
+    est = vr.SagaTable(
+        sample_grad=two_leaf(PROB.sample_grad), m=PROB.m
+    )
+    graph, ex = build_graph("ring", PROB.n_agents)
+    x0 = {
+        "w1": jnp.zeros((PROB.n_agents, 3)),
+        "w2": jnp.zeros((PROB.n_agents, PROB.n - 3)),
+    }
+    outs = {}
+    for packed in (True, False):
+        s = solver.make_solver(
+            f"ltadmm:tau=2,packed={str(packed).lower()}", graph, ex, est
+        )
+        st = s.init(x0)
+        step = jax.jit(s.step)
+        for i in range(3):
+            st = step(st, DATA, jax.random.key(i))
+        outs[packed] = s.consensus_params(st)
+    for a, b in zip(jax.tree.leaves(outs[True]),
+                    jax.tree.leaves(outs[False])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-6, rtol=1e-6)
+
+
+def test_abstract_state_matches_packed_init():
+    """abstract_state mirrors the packed state exactly (shape/dtype)."""
+    graph, ex = build_graph("ring", PROB.n_agents)
+    s = solver.make_solver("ltadmm", graph, ex, _saga_tree())
+    x0 = {"w": jnp.zeros((PROB.n_agents, PROB.n))}
+    x_sds = jax.tree.map(
+        lambda t: jax.ShapeDtypeStruct(t.shape, t.dtype), x0
+    )
+    sds = s.abstract_state(x_sds)
+    real = jax.tree.map(
+        lambda t: jax.ShapeDtypeStruct(t.shape, t.dtype), s.init(x0)
+    )
+    assert jax.tree.structure(sds) == jax.tree.structure(real)
+    assert jax.tree.leaves(sds) == jax.tree.leaves(real)
+
+
+def test_round_cost_hooks():
+    """Per-solver cost recipes replace CostModel's name keyed table."""
+    from repro.core.costmodel import CostModel
+    from repro.core.topology import Complete
+
+    cm = CostModel(t_g=1.0, t_c=10.0)
+    graph, ex = build_graph("ring", PROB.n_agents)
+    lt = solver.make_solver("ltadmm:tau=5", graph, ex, _saga_tree())
+    assert lt.round_cost(cm, 100) == cm.lt_admm_cc(100, 5)
+    lead = solver.make_solver("lead:lr=0.1", graph, ex, SGD_TREE)
+    assert lead.round_cost(cm, 100) == cm.t_g + cm.t_comm
+    cedas = solver.make_solver("cedas:lr=0.1", graph, ex, SGD_TREE)
+    assert cedas.round_cost(cm, 100) == cm.t_g + 2 * cm.t_comm
+    full = vr.FullGrad(full_grad=lambda p, d: p)
+    cold = solver.make_solver("cold:lr=0.1", graph, ex, full)
+    assert cold.round_cost(cm, 100) == 100 * cm.t_g + cm.t_comm
+    # degree awareness rides through CostModel.for_topology, and the
+    # deprecated name-keyed shim agrees with the solver hook
+    cm5 = CostModel.for_topology(Complete(5))
+    lead5 = solver.make_solver("lead:lr=0.1",
+                               *build_graph("complete", 5), SGD_TREE)
+    assert cm5.per_iteration("lead", 100) == pytest.approx(
+        lead5.round_cost(cm5, 100)
+    )
