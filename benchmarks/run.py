@@ -17,7 +17,8 @@ import platform
 import sys
 import time
 
-PERF_SMOKE_SPECS = ("ring", "drop:p=0.3,base=complete,seed=0")
+PERF_SMOKE_SPECS = ("ring", "drop:p=0.3,base=complete,seed=0",
+                    "churn:p=0.2,base=complete,seed=0")
 PERF_SMOKE_TOL = 1e-8
 PERF_SMOKE_ROUNDS = 600
 

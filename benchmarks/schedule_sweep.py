@@ -2,24 +2,36 @@
 
 The static sweep (``topology_sweep.py``) shows Theorem 1 on any fixed
 connected graph; this sweep shows the asynchronous-ADMM extension over
-link failures, deterministic switching and randomized gossip: exact
-convergence survives as long as activation is persistent (every union
-edge fires within the period), at a rate that degrades gracefully with
-the failure rate / activation sparsity, while the per-round wire cost
-DROPS with the number of live links.
+link failures, deterministic switching, randomized gossip and node-level
+churn: exact convergence survives as long as activation is persistent
+(every union edge — and therefore every node — fires within the
+period), at a rate that degrades gracefully with the failure rate /
+activation sparsity, while the per-round wire cost DROPS with the
+number of live links and the gradient cost with the participation rate.
 
 Reported per schedule: final gradient-norm floor, log-linear rate per
-round, period-mean wire bytes of the busiest agent, and the degree-aware
-(t_g, t_c) time of one round.
+round, period-mean wire bytes of the busiest agent, and the degree- and
+participation-aware (t_g, t_c) time of one round.
+
+``--participation`` runs the elastic-membership sweep instead:
+rounds-to-tolerance vs node participation rate (``sample:`` schedules
+over a complete base), with the cost model charging only participating
+nodes' gradient time and only live links' wire bytes.
 
     PYTHONPATH=src:. python benchmarks/schedule_sweep.py \
-        --schedules ring 'cycle:ring|star' drop:p=0.3,base=complete
+        --schedules ring 'cycle:ring|star' churn:p=0.2,base=complete
+    PYTHONPATH=src:. python benchmarks/schedule_sweep.py --participation
 """
 from __future__ import annotations
 
 import argparse
 
-from benchmarks.common import convergence_sweep
+import numpy as np
+
+from benchmarks.common import convergence_sweep, make_problem, run_solver
+from repro.core import vr
+from repro.core.costmodel import CostModel
+from repro.core.solver import make_solver
 
 DEFAULT_SCHEDULES = (
     "ring",                                     # static reference
@@ -29,7 +41,12 @@ DEFAULT_SCHEDULES = (
     "drop:p=0.3,base=complete,seed=0",
     "drop:p=0.5,base=complete,seed=0",          # half the links dead/round
     "gossip:edges=3,base=ring,seed=1",          # randomized activation
+    "churn:p=0.2,base=complete,seed=0",         # i.i.d. node dropout
+    "burst:fail=0.2,recover=0.5,seed=0",        # correlated node outages
+    "sample:frac=0.5,base=complete,seed=0",     # partial participation
 )
+
+PARTICIPATION_FRACS = (1.0, 0.75, 0.5, 0.25)
 
 
 def run(schedules=DEFAULT_SCHEDULES, rounds=1500, print_rows=True):
@@ -37,13 +54,56 @@ def run(schedules=DEFAULT_SCHEDULES, rounds=1500, print_rows=True):
                              print_rows=print_rows)
 
 
+def participation_sweep(fracs=PARTICIPATION_FRACS, rounds=5000, tol=1e-10,
+                        print_rows=True):
+    """Rounds-to-tolerance vs node participation rate.
+
+    Sweeps ``sample:frac=...`` over a complete base (frac=1.0 is the
+    full-participation reference) and reports, per rate: rounds until
+    ||∇F(x̄)||² <= tol, the participation-aware (t_g, t_c) cost of one
+    round (only participating nodes' gradient time charged), the
+    period-mean wire bytes of the busiest agent (only live links
+    charged), and the final gradient-norm floor.  Returns rows
+    ``(spec, participation, rounds_to_tol, t_round, wire, final)``.
+    """
+    rows = []
+    for frac in fracs:
+        spec = f"sample:frac={frac},base=complete,seed=0"
+        prob, data, graph, ex = make_problem(topology=spec)
+        saga = vr.SagaTable(sample_grad=prob.sample_grad, m=prob.m)
+        solver = make_solver("ltadmm:compressor=qbit:bits=8", graph, ex,
+                             saga)
+        idx, gns = run_solver(prob, data, solver, rounds, metric_every=10)
+        g, i = np.asarray(gns), np.asarray(idx)
+        hit = np.nonzero(g <= tol)[0]
+        rtt = int(i[hit[0]]) if hit.size else None
+        t_round = solver.round_cost(CostModel.for_topology(graph), prob.m)
+        wire = solver.wire_bytes({"x": np.zeros((prob.n,), np.float32)})
+        rows.append((spec, graph.participation(), rtt, t_round, wire,
+                     float(g[-1])))
+    if print_rows:
+        print(f"{'schedule':38s} {'particip.':>9s} {'rounds@tol':>10s} "
+              f"{'t/round':>8s} {'wire B/round':>13s} {'final':>10s}")
+        for spec, part, rtt, t_round, wire, final in rows:
+            print(f"{spec:38s} {part:9.2f} "
+                  f"{rtt if rtt is not None else '-':>10} "
+                  f"{t_round:8.1f} {wire:13d} {final:10.2e}")
+    return rows
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--schedules", nargs="+",
                     default=list(DEFAULT_SCHEDULES))
     ap.add_argument("--rounds", type=int, default=1500)
+    ap.add_argument("--participation", action="store_true",
+                    help="rounds-to-tolerance vs participation rate "
+                         "(sample: sweep) instead of the schedule sweep")
     args = ap.parse_args()
-    run(args.schedules, rounds=args.rounds)
+    if args.participation:
+        participation_sweep()
+    else:
+        run(args.schedules, rounds=args.rounds)
 
 
 if __name__ == "__main__":

@@ -238,6 +238,16 @@ def _select_slot(mask_s, on_tree, off_tree):
     )
 
 
+def _select_agents(node_mask, on_tree, off_tree):
+    """Per-agent select on an ``[A, ...]`` tree: agent i advances where
+    ``node_mask[i]`` (participating this round), holds otherwise.
+    ``node_mask is None`` (no node layer) keeps ``on_tree`` untouched,
+    so edge-only schedules compile the exact program they always did."""
+    if node_mask is None:
+        return on_tree
+    return _select_slot(node_mask, on_tree, off_tree)
+
+
 def step(
     cfg: LTADMMConfig,
     topo: Topology,
@@ -528,6 +538,16 @@ def _step_packed(
 # union-graph fixed point satisfies every round's update and exact
 # convergence survives under persistent activation.
 #
+# Node-level participation (sched.round_node_mask(k), None when the
+# schedule has no node layer) extends the same argument to flapping
+# AGENTS: an inactive node freezes its x and skips its tau local epochs
+# on top of the held edge state — its incident slots are all off by
+# construction (schedule builders merge the node mask into the edge
+# masks), so the per-edge holds below need no extra gating, and the
+# static fixed point (where x_{k+1} = x_k) still satisfies every
+# round's update.  Persistent node activation is what validate_schedule
+# checks in place of per-edge persistence alone.
+#
 # One structural change vs. the static state: over link failures the
 # x-message error-feedback stream desynchronizes if x̂ is per agent (a
 # neighbor that missed a round can never resync, because later deltas
@@ -611,11 +631,19 @@ def _step_schedule_tree(
     cx, cz = cfg.compressor_x, cfg.compressor_z
     nbr_table = topo.neighbor_table()
     mask_k = sched.round_mask(state.k)  # [A, S] traced bool
+    node_k = sched.round_node_mask(state.k)  # [A] traced bool | None
     active = [mask_k[:, sl] for sl in range(topo.n_slots)]
     nbr_ids = [jnp.asarray(nbr_table[:, sl]) for sl in range(topo.n_slots)]
 
     # ---- 1. local training: union degrees + full held dual sum ------------
+    # An inactive NODE freezes its x entirely (= skips its tau local
+    # epochs; the uniform SPMD program still runs them, the select
+    # discards the result).  Its edges are all inactive by construction,
+    # so duals and EF mirrors hold through the per-edge gates below —
+    # at the static union fixed point x_{k+1} = x_k anyway, so freezing
+    # preserves it.
     x_new = local_phase(cfg, topo, vr_est, state.x, state.z, data, round_key)
+    x_new = _select_agents(node_k, x_new, state.x)
 
     # ---- 2-4. per-edge sender-side error feedback for x -------------------
     m_x, x_hat_edge_new, u_edge_new = [], [], []
@@ -751,9 +779,14 @@ def _step_schedule_packed(
     cx, cz = cfg.compressor_x, cfg.compressor_z
     nbr = jnp.asarray(topo.neighbor_table())
     act = sched.round_mask(state.k)[:, :, None]  # [A, S, 1] traced bool
+    node_k = sched.round_node_mask(state.k)  # [A] traced bool | None
 
     # ---- 1. local training: union degrees + full held dual sum ------------
+    # Inactive nodes freeze their x / skip local training (see
+    # _step_schedule_tree); their edges are off, so all edge state holds
+    # through the act-gated selects below.
     x_new = local_phase(cfg, topo, vr_est, state.x, state.z, data, round_key)
+    x_new = _select_agents(node_k, x_new, state.x)
 
     # ---- 2-4. per-edge sender-side error feedback for x -------------------
     xh = state.x_hat_edge  # [A, S, N]
@@ -869,8 +902,13 @@ def wire_bytes_total(cfg: LTADMMConfig, topo: Topology, params) -> int:
     return int(round(float(np.sum(topo.degrees())) * per_edge))
 
 
-def wire_bytes_at(cfg: LTADMMConfig, sched, params, t: int) -> int:
-    """Exact busiest-agent bytes at round ``t`` of a schedule: only the
-    links active that round carry payloads."""
+def wire_bytes_at(cfg: LTADMMConfig, graph, params, t: int) -> int:
+    """Exact busiest-agent bytes at round ``t``: only the links active
+    that round carry payloads.  Accepts a ``TopologySchedule`` or a
+    static ``Topology`` — on a static graph every round is identical,
+    so ``t`` selects the same (constant) exact value the schedule path
+    would: callers can always pass an explicit round."""
     per_edge = _edge_payload_bytes(cfg, params)
-    return int(np.max(sched.round_degrees(t))) * per_edge
+    deg = (graph.round_degrees(t) if hasattr(graph, "round_degrees")
+           else graph.degrees())
+    return int(np.max(deg)) * per_edge

@@ -15,7 +15,11 @@ on stacked ``[A, ...]`` pytrees with the Metropolis–Hastings mixing matrix
 of the SAME ``Topology`` object LT-ADMM-CC runs on, so their communication
 pattern matches LT-ADMM-CC's on every graph family (ring, torus, star,
 complete, random).  A ``TopologySchedule`` as ``topo`` runs them over
-time-varying graphs with per-round Metropolis–Hastings weights.
+time-varying graphs with per-round Metropolis–Hastings weights; a
+schedule with a node-participation layer (``churn:``/``burst:``/
+``sample:``) additionally makes inactive nodes skip their gradient step
+and hold all their state for the round (their links are quiet, so the
+round's mixing matrix isolates them).
 
 Every baseline conforms to the ``core.solver.Solver`` protocol: the
 gradient estimator is bound at construction (``grad_est``), the round
@@ -155,25 +159,31 @@ class GossipSolverMixin:
 
     def wire_bytes(self, params, t: int | None = None) -> int:
         """Bytes the busiest agent transmits per iteration (one message
-        per incident edge per communication round).  For a
-        ``TopologySchedule``, ``t=None`` charges the period-mean active
-        degree; an explicit ``t`` gives the exact round.  Packed solvers
-        charge one whole-plane message (one scale / index set)."""
+        per incident edge per communication round).  ``t=None`` charges
+        the period-mean active degree of a schedule; an explicit ``t``
+        is ALWAYS honored via the uniform exact-round path (constant on
+        a static graph).  Packed solvers charge one whole-plane message
+        (one scale / index set)."""
         if getattr(self, "packed", False):
             params = packing.abstract_plane(packing.layout_of(params))
         per_edge = compression.tree_wire_bytes(
             self._wire_compressor(), params
         ) * self.comm_rounds
-        if t is not None and isinstance(self.topo, TopologySchedule):
-            return int(np.max(self.topo.round_degrees(t))) * per_edge
+        if t is not None:
+            deg = (self.topo.round_degrees(t)
+                   if hasattr(self.topo, "round_degrees")
+                   else self.topo.degrees())
+            return int(np.max(deg)) * per_edge
         return int(round(float(np.max(self.topo.degrees())) * per_edge))
 
     def round_cost(self, cost_model, m: int) -> float:
         """(t_g, t_c) cost of ONE iteration: gradient evaluations follow
-        the bound estimator (``vr.FullGrad`` sweeps all m components),
-        communication charges ``comm_rounds`` rounds."""
+        the bound estimator (``vr.FullGrad`` sweeps all m components)
+        and charge only participating nodes (``t_grad``); communication
+        charges ``comm_rounds`` rounds."""
         n_grad = m if isinstance(self.grad_est, vr.FullGrad) else 1
-        return n_grad * cost_model.t_g + self.comm_rounds * cost_model.t_comm
+        return (n_grad * cost_model.t_grad
+                + self.comm_rounds * cost_model.t_comm)
 
     # ---- sharding / lowering hooks ----------------------------------------
 
@@ -214,6 +224,25 @@ class GossipSolverMixin:
             {f: state[f] for f in self.state_fields}, data, key, k,
             self._estimator(state),
         )
+        # node-level participation: an inactive node skips its gradient
+        # step and holds ALL its per-agent state this round; its links
+        # are quiet already (the per-round Metropolis weights of the
+        # merged masks isolate it, so active neighbors never read it).
+        nm = (self.topo.round_node_mask(k)
+              if isinstance(self.topo, TopologySchedule) else None)
+        if nm is not None:
+            st = {
+                f: tree_map(
+                    lambda new, old: jnp.where(
+                        jnp.reshape(
+                            nm, (new.shape[0],) + (1,) * (new.ndim - 1)
+                        ),
+                        new, old,
+                    ),
+                    st[f], state[f],
+                )
+                for f in self.state_fields
+            }
         st["k"] = k + 1
         return st
 

@@ -12,10 +12,20 @@ general graph every agent serializes one message per incident edge, so a
 communication round costs ``t_c * mean_degree / 2``.  Build with
 ``CostModel.for_topology(topo)`` to account for this; the default
 (``mean_degree = 2``) reproduces the paper's ring numbers exactly.
+
+Participation awareness: a ``TopologySchedule`` with a node layer
+(``churn:``/``burst:``/``sample:``) has only a fraction of agents
+computing per round — ``for_topology`` picks up the period-mean
+``participation()`` and every gradient term charges
+``t_g * participation`` (the mean per-agent local-training cost; the
+default 1.0 reproduces the full-participation numbers exactly).
+Communication is already participation-aware through ``mean_degree``:
+the schedule's ``degrees()`` counts only live links of live nodes.
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 
 import numpy as np
 
@@ -25,17 +35,24 @@ class CostModel:
     t_g: float = 1.0
     t_c: float = 10.0  # paper Fig. 2 regime: t_c = 10 t_g
     mean_degree: float = 2.0  # ring default; see for_topology
+    participation: float = 1.0  # fraction of nodes computing per round
 
     @classmethod
     def for_topology(cls, topo, t_g: float = 1.0, t_c: float = 10.0):
-        """Degree-aware cost model: t_c scales with mean_degree / 2.
+        """Degree- and participation-aware cost model.
 
         Accepts a ``TopologySchedule`` too: its ``degrees()`` is the
         period-mean ACTIVE degree per agent, so only live links are
         charged — a drop:p=0.5 schedule pays half the static graph's
-        communication time per round."""
+        communication time per round — and its ``participation()`` is
+        the period-mean fraction of computing nodes, so a churn:p=0.2
+        schedule pays 80% of the static local-training time per round
+        (static topologies charge full participation)."""
         return cls(t_g=t_g, t_c=t_c,
-                   mean_degree=float(np.mean(topo.degrees())))
+                   mean_degree=float(np.mean(topo.degrees())),
+                   participation=float(
+                       getattr(topo, "participation", lambda: 1.0)()
+                   ))
 
     @property
     def t_comm(self) -> float:
@@ -48,29 +65,37 @@ class CostModel:
     def _tc(self) -> float:
         return self.t_comm
 
+    @property
+    def t_grad(self) -> float:
+        """Effective mean per-agent cost of one component-gradient
+        evaluation: only participating nodes run their local epochs, so
+        t_g scales with the participation fraction."""
+        return self.t_g * self.participation
+
     def lt_admm_cc(self, m: int, tau: int) -> float:
         """(m + tau - 1) t_g + 2 t_c  — Table I last row.
 
         Full gradient (m evals) at the phase start to reset the SAGA table,
         then tau - 1 single-component evals; 2 communication rounds (the
-        x-message and the z-message).
+        x-message and the z-message).  Gradient terms charge only
+        participating nodes (``t_grad``).
         """
-        return (m + tau - 1) * self.t_g + 2 * self._tc
+        return (m + tau - 1) * self.t_grad + 2 * self._tc
 
     def lead(self, tau: int) -> float:
-        return tau * (self.t_g + self._tc)
+        return tau * (self.t_grad + self._tc)
 
     def cedas(self, tau: int) -> float:
-        return tau * (self.t_g + 2 * self._tc)
+        return tau * (self.t_grad + 2 * self._tc)
 
     def cold_dpdc_sgd(self, tau: int) -> float:
-        return tau * (self.t_g + self._tc)
+        return tau * (self.t_grad + self._tc)
 
     def cold_dpdc_full(self, tau: int, m: int) -> float:
-        return tau * (m * self.t_g + self._tc)
+        return tau * (m * self.t_grad + self._tc)
 
     def dsgd(self, tau: int) -> float:
-        return tau * (self.t_g + self._tc)
+        return tau * (self.t_grad + self._tc)
 
     def per_iteration(self, algo: str, m: int, full_grad: bool = False):
         """Cost of ONE iteration of a single-loop baseline.
@@ -82,9 +107,16 @@ class CostModel:
         is honored only where the paper runs full-gradient variants
         (COLD/DPDC), matching the historical hardcoded table.
         """
+        warnings.warn(
+            "CostModel.per_iteration is deprecated; build the solver "
+            "and use Solver.round_cost(cost_model, m)",
+            DeprecationWarning,
+            stacklevel=2,
+        )
         from repro.core.baselines import ALL_BASELINES
 
         if algo not in ALL_BASELINES:
             raise ValueError(algo)
         n_grad = m if (full_grad and algo in ("cold", "dpdc")) else 1
-        return n_grad * self.t_g + ALL_BASELINES[algo].comm_rounds * self.t_comm
+        return (n_grad * self.t_grad
+                + ALL_BASELINES[algo].comm_rounds * self.t_comm)

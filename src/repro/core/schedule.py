@@ -27,11 +27,31 @@ edge is active infinitely often.  Every builder below guarantees this
 *persistent activation* (each union edge active at least once per
 period); ``validate_schedule`` checks it.
 
+Node-level participation (elastic membership)
+---------------------------------------------
+A schedule may additionally carry a ``[T, A]`` **node participation
+mask** (``node_masks``): an inactive *node* deactivates ALL its incident
+slots for that round, so the edge masks stay edge-symmetric and the
+compiled union-slot SPMD program is untouched.  On top of the held edge
+state, an inactive node freezes its x and skips its tau local epochs
+(``admm.step_schedule``) or its gradient step (the gossip baselines) —
+the node-asynchronous extension of the same fixed-point argument, and
+the partial-participation regime of Communication-Efficient ADMM-based
+Federated Learning (Zhou & Li): only a sampled agent subset computes AND
+communicates per round.  Persistent *node* activation (every node
+participates at least once per period) is forced by every builder and
+checked by ``validate_schedule``.
+
 Builders / spec strings (see ``make_schedule``):
 
 * ``cycle:ring|star``                — deterministic switching sequence
 * ``drop:p=0.2,base=complete``      — seeded i.i.d. link failures
 * ``gossip:edges=2,base=ring``      — randomized edge activation
+* ``churn:p=0.1,base=complete``     — seeded i.i.d. node dropout
+* ``burst:fail=0.1,recover=0.5``    — bursty node failures (per-node
+  2-state Markov chain, seeded)
+* ``sample:frac=0.25,base=complete`` — Zhou-&-Li partial participation
+  (a fixed-size sampled agent subset per round)
 
 ``make_graph`` is the ONE spec-parsing entry point for the whole repo
 (launch/train.py, launch/steps.py, benchmarks/*): it returns a static
@@ -40,6 +60,9 @@ Builders / spec strings (see ``make_schedule``):
 from __future__ import annotations
 
 import dataclasses
+import threading
+import weakref
+from math import gcd
 from typing import Any
 
 import jax.numpy as jnp
@@ -68,11 +91,18 @@ class TopologySchedule:
     ``masks``: ``[T, A, S]`` bool, round ``t`` activity per (agent,
     slot); always a subset of ``union.slot_mask()`` and symmetric per
     edge (``masks[t, i, s] == masks[t, j, reverse_slot[s]]``).
+    ``node_masks``: optional ``[T, A]`` bool node-participation layer —
+    when present, ``masks`` already has every incident slot of an
+    inactive node switched off (the merge happens at construction, so
+    the edge invariants above keep holding verbatim), and the solvers
+    additionally freeze the x / skip the local training of inactive
+    nodes (``round_node_mask``).
     """
 
     union: Any
     masks: np.ndarray
     name: str = "schedule"
+    node_masks: np.ndarray | None = None
 
     @property
     def period(self) -> int:
@@ -96,8 +126,25 @@ class TopologySchedule:
 
     def degrees(self) -> np.ndarray:
         """Period-mean ACTIVE degree per agent ([A] float) — what the
-        degree-aware cost model and wire accounting charge per round."""
+        degree-aware cost model and wire accounting charge per round.
+        Node deactivation is already merged into ``masks``, so only live
+        links of participating nodes are counted."""
         return self.masks.sum(axis=2).mean(axis=0)
+
+    def round_node_mask_host(self, t: int) -> np.ndarray:  # [A] bool
+        """Node participation at round ``t`` (all-active without a node
+        layer)."""
+        if self.node_masks is None:
+            return np.ones((self.n_agents,), dtype=bool)
+        return self.node_masks[t % self.period]
+
+    def participation(self) -> float:
+        """Period-mean fraction of participating nodes (1.0 without a
+        node layer) — what the cost model charges for local training:
+        an inactive node runs no gradient evaluations that round."""
+        if self.node_masks is None:
+            return 1.0
+        return float(self.node_masks.mean())
 
     def topology_at(self, t: int) -> GraphTopology:
         """The round-``t`` graph as a standalone ``GraphTopology`` (for
@@ -118,6 +165,15 @@ class TopologySchedule:
     def round_mask(self, k) -> jnp.ndarray:
         """[A, S] activity mask for (traced) round index ``k``."""
         return jnp.asarray(self.masks)[jnp.mod(k, self.period)]
+
+    def round_node_mask(self, k) -> jnp.ndarray | None:
+        """[A] node-participation mask for (traced) round ``k``, or
+        ``None`` when the schedule has no node layer — a host-level
+        constant, so edge-only schedules compile the exact same program
+        as before."""
+        if self.node_masks is None:
+            return None
+        return jnp.asarray(self.node_masks)[jnp.mod(k, self.period)]
 
 
 def validate_schedule(sched: TopologySchedule) -> None:
@@ -148,6 +204,20 @@ def validate_schedule(sched: TopologySchedule) -> None:
     assert (ever == um).all(), (
         "some union edge is never active — joint connectivity violated"
     )
+    if sched.node_masks is not None:
+        nm = sched.node_masks
+        assert nm.shape == (sched.period, A), nm.shape
+        assert nm.dtype == np.bool_
+        # an inactive node deactivates ALL its incident slots that round
+        assert not (sched.masks & ~nm[:, :, None]).any(), (
+            "edge mask active on an inactive node"
+        )
+        # persistent NODE activation: every node participates (computes
+        # and communicates) at least once per period
+        assert nm.any(axis=0).all(), (
+            "some node never participates — persistent node activation "
+            "violated"
+        )
 
 
 # ---------------------------------------------------------------------------
@@ -242,6 +312,10 @@ def gossip_schedule(base, edges_per_round: int = 2, seed: int = 0,
     ``edges_per_round`` edges of ``base`` sampled uniformly without
     replacement (seeded).  Edges never sampled within the period are
     spliced into a random round (persistent activation)."""
+    assert edges_per_round >= 1, (
+        f"gossip needs edges_per_round >= 1, got {edges_per_round} "
+        f"(0 would activate nothing — use the static base instead)"
+    )
     rng = np.random.RandomState(seed)
     edges = sorted(_undirected(edge_set(base)))
     k = min(edges_per_round, len(edges))
@@ -258,10 +332,131 @@ def gossip_schedule(base, edges_per_round: int = 2, seed: int = 0,
 
 
 # ---------------------------------------------------------------------------
+# Node-level participation builders (elastic membership)
+# ---------------------------------------------------------------------------
+
+
+def node_participation_schedule(base, node_masks, name: str = "nodes",
+                                seed: int = 0) -> TopologySchedule:
+    """Layer a ``[T, A]`` node-participation mask over ``base`` (a static
+    ``Topology`` or an existing ``TopologySchedule`` — node churn
+    composes with link failures; periods combine by lcm).
+
+    An inactive node switches off ALL its incident slots, so the merged
+    edge masks stay edge-symmetric and inside the union graph — the
+    compiled union-slot SPMD program is untouched.  Persistent
+    activation is forced: any union edge whose endpoints are never
+    simultaneously up within the period gets both endpoints spliced up
+    in one seeded-random (edge-active) round; with a connected union
+    this also guarantees every node participates at least once.
+    """
+    node_masks = np.asarray(node_masks, dtype=bool)
+    assert node_masks.ndim == 2, node_masks.shape
+    rng = np.random.RandomState(seed)
+    if isinstance(base, TopologySchedule):
+        assert base.node_masks is None, (
+            "base schedule already carries a node layer — merge the "
+            "node masks before layering"
+        )
+        union = base.union
+        tn = node_masks.shape[0]
+        T = base.period * tn // gcd(base.period, tn)
+        edge_m = np.tile(base.masks, (T // base.period, 1, 1))
+        node_m = np.tile(node_masks, (T // tn, 1))
+    else:
+        union = base
+        T = node_masks.shape[0]
+        um = union.slot_mask()
+        edge_m = np.broadcast_to(um[None], (T,) + um.shape).copy()
+        node_m = node_masks.copy()
+    assert node_m.shape[1] == union.n_agents, node_m.shape
+    nbr = union.neighbor_table()
+
+    def merge():
+        # merged[t, i, s] = edge active AND both endpoints participating
+        return edge_m & node_m[:, :, None] & node_m[:, nbr]
+
+    merged = merge()
+    # persistent activation: every union edge must fire within the period
+    for (i, j), (s_i, _) in sorted(_slot_of_edge(union).items()):
+        if merged[:, i, s_i].any():
+            continue
+        live = np.nonzero(edge_m[:, i, s_i])[0]  # base keeps persistence
+        t = int(live[rng.randint(len(live))])
+        node_m[t, i] = node_m[t, j] = True
+    merged = merge()
+    return TopologySchedule(
+        union=union, masks=merged, name=name, node_masks=node_m
+    )
+
+
+def churn_schedule(base, p: float = 0.1, seed: int = 0,
+                   period: int = 16) -> TopologySchedule:
+    """Seeded i.i.d. node dropout over ``base``: each node is inactive
+    with probability ``p`` independently per round (cycled with
+    ``period``) — it freezes its x, skips its tau local epochs, and all
+    its links go quiet; duals and EF mirrors are held exactly as for
+    inactive edges.  Nodes/edges the coin kills for the whole period are
+    forced back into one random round (persistent activation)."""
+    assert 0.0 <= p < 1.0, p
+    rng = np.random.RandomState(seed)
+    node = rng.rand(period, base.n_agents) >= p
+    return node_participation_schedule(
+        base, node, name=f"churn{p}:{getattr(base, 'name', '?')}",
+        seed=rng.randint(2**31 - 1),
+    )
+
+
+def burst_schedule(base, fail: float = 0.1, recover: float = 0.5,
+                   seed: int = 0, period: int = 32) -> TopologySchedule:
+    """Correlated / bursty node failures: each node runs a seeded
+    2-state Markov chain (up -> down w.p. ``fail``, down -> up w.p.
+    ``recover``; mean outage length 1/recover rounds), so failures
+    cluster in time — the straggler/maintenance-window regime, vs the
+    memoryless ``churn``.  Persistent activation is forced as in
+    ``node_participation_schedule``."""
+    assert 0.0 <= fail < 1.0, fail
+    assert 0.0 < recover <= 1.0, recover
+    rng = np.random.RandomState(seed)
+    up = np.ones(base.n_agents, dtype=bool)
+    rows = []
+    for _ in range(period):
+        r = rng.rand(base.n_agents)
+        up = np.where(up, r >= fail, r < recover)
+        rows.append(up)
+    return node_participation_schedule(
+        base, np.stack(rows),
+        name=f"burst{fail}-{recover}:{getattr(base, 'name', '?')}",
+        seed=rng.randint(2**31 - 1),
+    )
+
+
+def sample_schedule(base, frac: float = 0.25, seed: int = 0,
+                    period: int = 32) -> TopologySchedule:
+    """Partial participation in the style of Communication-Efficient
+    ADMM-based Federated Learning (Zhou & Li): each round a uniformly
+    sampled subset of ``max(1, round(frac * A))`` agents computes AND
+    communicates; everyone else holds.  Edges never covered within the
+    period get their endpoints spliced up in one extra round (persistent
+    activation takes precedence over the exact subset size there)."""
+    assert 0.0 < frac <= 1.0, frac
+    A = base.n_agents
+    k = max(1, int(round(frac * A)))
+    rng = np.random.RandomState(seed)
+    node = np.zeros((period, A), dtype=bool)
+    for t in range(period):
+        node[t, rng.choice(A, size=k, replace=False)] = True
+    return node_participation_schedule(
+        base, node, name=f"sample{frac}:{getattr(base, 'name', '?')}",
+        seed=rng.randint(2**31 - 1),
+    )
+
+
+# ---------------------------------------------------------------------------
 # Spec parsing — the shared entry point for CLIs / recipes / benchmarks
 # ---------------------------------------------------------------------------
 
-SCHEDULES = ("cycle", "drop", "gossip")
+SCHEDULES = ("cycle", "drop", "gossip", "churn", "burst", "sample")
 
 
 def _parse_kw(rest: str) -> dict:
@@ -291,6 +486,14 @@ def make_schedule(spec: str, n_agents: int) -> TopologySchedule:
       ``base=erdos|p=0.4``).
     * ``gossip:edges=2,base=ring,seed=0,period=32`` — randomized edge
       activation.
+    * ``churn:p=0.1,base=complete,seed=0,period=16`` — i.i.d. node
+      dropout (inactive nodes freeze x, skip local training, hold all
+      edge state).
+    * ``burst:fail=0.1,recover=0.5,base=complete,seed=0,period=32`` —
+      correlated/bursty node failures (2-state Markov chain per node).
+    * ``sample:frac=0.25,base=complete,seed=0,period=32`` — partial
+      participation: a sampled agent subset computes AND communicates
+      per round (Zhou & Li).
     """
     name, _, rest = spec.partition(":")
     if name == "cycle":
@@ -334,6 +537,44 @@ def make_schedule(spec: str, n_agents: int) -> TopologySchedule:
             base, edges_per_round=int(kw.get("edges", 2)),
             seed=int(kw.get("seed", 0)), period=int(kw.get("period", 32)),
         )
+    if name == "churn":
+        kw = _parse_kw(rest)
+        base = make_topology(_base_spec(kw, "complete"), n_agents)
+        known = {"p", "seed", "period"}
+        if set(kw) - known:
+            raise ValueError(
+                f"churn schedule got unknown params {sorted(set(kw) - known)}"
+            )
+        return churn_schedule(
+            base, p=float(kw.get("p", 0.1)), seed=int(kw.get("seed", 0)),
+            period=int(kw.get("period", 16)),
+        )
+    if name == "burst":
+        kw = _parse_kw(rest)
+        base = make_topology(_base_spec(kw, "complete"), n_agents)
+        known = {"fail", "recover", "seed", "period"}
+        if set(kw) - known:
+            raise ValueError(
+                f"burst schedule got unknown params {sorted(set(kw) - known)}"
+            )
+        return burst_schedule(
+            base, fail=float(kw.get("fail", 0.1)),
+            recover=float(kw.get("recover", 0.5)),
+            seed=int(kw.get("seed", 0)), period=int(kw.get("period", 32)),
+        )
+    if name == "sample":
+        kw = _parse_kw(rest)
+        base = make_topology(_base_spec(kw, "complete"), n_agents)
+        known = {"frac", "seed", "period"}
+        if set(kw) - known:
+            raise ValueError(
+                f"sample schedule got unknown params "
+                f"{sorted(set(kw) - known)}"
+            )
+        return sample_schedule(
+            base, frac=float(kw.get("frac", 0.25)),
+            seed=int(kw.get("seed", 0)), period=int(kw.get("period", 32)),
+        )
     raise ValueError(
         f"unknown schedule {spec!r}; choose from {SCHEDULES}"
     )
@@ -370,16 +611,29 @@ def build_graph(spec: str, n_agents: int, axis=None, mesh=None):
 # ---------------------------------------------------------------------------
 
 
+# Cache keyed by schedule identity (schedules are frozen and eq=False,
+# so identity IS value identity); a WeakKeyDictionary keeps no schedule
+# alive beyond its users, and the lock makes concurrent benchmark
+# threads see exactly one stack per schedule — the previous
+# object.__setattr__-on-a-frozen-dataclass cache was racy and invisible
+# to dataclass semantics.
+_METROPOLIS_CACHE: weakref.WeakKeyDictionary = weakref.WeakKeyDictionary()
+_METROPOLIS_LOCK = threading.Lock()
+
+
 def metropolis_schedule(sched: TopologySchedule) -> np.ndarray:
     """[T, A, A] Metropolis–Hastings matrix per round: each round's W is
     doubly stochastic for THAT round's graph (agents isolated in a round
-    keep their value); joint connectivity makes the period-product
-    contractive.  Cached on the schedule instance (no global retention)."""
-    cached = getattr(sched, "_metropolis_stack", None)
-    if cached is None:
-        cached = np.stack([
-            metropolis_weights(sched.topology_at(t))
-            for t in range(sched.period)
-        ])
-        object.__setattr__(sched, "_metropolis_stack", cached)
+    — by link failure or node churn — keep their value); joint
+    connectivity makes the period-product contractive.  Cached per
+    schedule instance in a module-level ``WeakKeyDictionary`` (thread-
+    safe, no global retention)."""
+    with _METROPOLIS_LOCK:
+        cached = _METROPOLIS_CACHE.get(sched)
+        if cached is None:
+            cached = np.stack([
+                metropolis_weights(sched.topology_at(t))
+                for t in range(sched.period)
+            ])
+            _METROPOLIS_CACHE[sched] = cached
     return cached

@@ -149,13 +149,15 @@ class LTADMMSolver:
 
     def wire_bytes(self, params, t: int | None = None) -> int:
         """Busiest-agent TX bytes per outer round (x-message + z-message
-        per incident edge).  For a schedule, ``t=None`` charges the
-        period-mean active degree; explicit ``t`` is the exact round.
-        On the packed plane a message is ONE compressed [N] vector (one
-        scale / one index set), not one per leaf."""
+        per incident edge).  ``t=None`` charges the period-mean active
+        degree of a schedule; an explicit ``t`` is ALWAYS honored via
+        the uniform exact-round path — on a static graph every round is
+        the same constant, so both forms agree there.  On the packed
+        plane a message is ONE compressed [N] vector (one scale / one
+        index set), not one per leaf."""
         if self.packed:
             params = packing.abstract_plane(packing.layout_of(params))
-        if t is not None and self.is_schedule:
+        if t is not None:
             return admm.wire_bytes_at(self.cfg, self.graph, params, t)
         return admm.wire_bytes_per_round(self.cfg, self.graph, params)
 

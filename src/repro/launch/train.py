@@ -5,11 +5,14 @@ end-to-end: agents hold heterogeneous synthetic data shards, train
 locally, and exchange (compressed) messages over the agent graph
 selected with ``--topology`` (ring, grid2d, star, complete, erdos,
 smallworld) or a time-varying ``--topology-schedule`` (cycle:ring|star,
-drop:p=0.2,..., gossip:edges=2,...).  On a single host device the graph
-is simulated (same code path, gather-by-index exchange); on a
-multi-device mesh the exchange is one collective-permute per neighbor
-slot over the (union) agent axis — schedules keep that program static
-and mask inactive edges per round.
+drop:p=0.2,..., gossip:edges=2,..., and the node-level participation
+schedules churn:p=0.1,..., burst:fail=0.1,recover=0.5,...,
+sample:frac=0.25,...).  On a single host device the graph is simulated
+(same code path, gather-by-index exchange); on a multi-device mesh the
+exchange is one collective-permute per neighbor slot over the (union)
+agent axis — schedules keep that program static and mask inactive
+edges per round; node schedules additionally freeze a churned-out
+agent's params for the round (asynchronous-ADMM semantics).
 
     PYTHONPATH=src python -m repro.launch.train --arch qwen3-0.6b --smoke \
         --agents 4 --rounds 20 --compressor qbit --topology complete

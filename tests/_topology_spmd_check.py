@@ -114,6 +114,12 @@ def main():
     check_admm_schedule(
         SC.cycle_schedule([T.Ring(4), T.Star(4)]), mesh
     )
+    # node churn: the x-freeze select and node-merged masks must be
+    # implementation-independent too (seed 1: inactive nodes in three
+    # of the four rounds stepped)
+    check_admm_schedule(
+        SC.churn_schedule(T.Complete(4), p=0.3, seed=1, period=4), mesh
+    )
 
 
 if __name__ == "__main__":

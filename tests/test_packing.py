@@ -222,6 +222,9 @@ PARITY_COMPRESSORS = {
 PARITY_GRAPHS = {
     "static": "ring",
     "drop": "drop:p=0.3,base=complete,seed=0",
+    # seed 1: inactive nodes in every early round, so the packed and
+    # tree paths must agree on the x-freeze / held-state semantics too
+    "churn": "churn:p=0.3,base=complete,seed=1,period=8",
 }
 
 
@@ -316,6 +319,7 @@ def test_round_cost_hooks():
     cm5 = CostModel.for_topology(Complete(5))
     lead5 = solver.make_solver("lead:lr=0.1",
                                *build_graph("complete", 5), SGD_TREE)
-    assert cm5.per_iteration("lead", 100) == pytest.approx(
-        lead5.round_cost(cm5, 100)
-    )
+    with pytest.warns(DeprecationWarning, match="per_iteration"):
+        assert cm5.per_iteration("lead", 100) == pytest.approx(
+            lead5.round_cost(cm5, 100)
+        )

@@ -24,6 +24,16 @@ def _schedules():
         "drop_ring": S.drop_schedule(T.Ring(N), p=0.2, seed=3, period=8),
         "gossip_ring": S.gossip_schedule(T.Ring(N), edges_per_round=3,
                                          seed=1),
+        "churn_complete": S.churn_schedule(T.Complete(N), p=0.3, seed=1,
+                                           period=8),
+        "burst_ring": S.burst_schedule(T.Ring(N), fail=0.2, recover=0.5,
+                                       seed=2, period=16),
+        "sample_complete": S.sample_schedule(T.Complete(N), frac=0.4,
+                                             seed=0, period=12),
+        "churn_over_drop": S.churn_schedule(
+            S.drop_schedule(T.Complete(N), p=0.2, seed=3, period=4),
+            p=0.2, seed=4, period=6,
+        ),
     }
 
 
@@ -101,6 +111,94 @@ def test_make_graph_dispatch():
         S.make_schedule("drop:prob=0.7", 6)
     with pytest.raises(ValueError):
         S.make_schedule("cycle:", 6)
+    # node-participation specs
+    ch = S.make_graph("churn:p=0.2,base=ring,seed=3,period=8", 6)
+    assert isinstance(ch, S.TopologySchedule) and ch.node_masks is not None
+    assert ch.period == 8 and ch.node_masks.shape == (8, 6)
+    bu = S.make_graph("burst:fail=0.2,recover=0.6,seed=1,period=12", 6)
+    assert bu.node_masks is not None and bu.period == 12
+    sa = S.make_graph("sample:frac=0.5,base=complete,period=10", 6)
+    assert sa.node_masks is not None and sa.period == 10
+    for bad in ("churn:prob=0.2", "burst:p=0.1", "sample:k=3"):
+        with pytest.raises(ValueError):
+            S.make_schedule(bad, 6)
+
+
+def test_degenerate_schedule_params():
+    """Edge-case parameters either reduce provably to the static graph
+    or fail fast with a clear error — never a silent broken schedule."""
+    # p=0.0: no link ever drops => every round IS the base graph
+    base = T.Ring(6)
+    sched = S.drop_schedule(base, p=0.0, seed=0, period=4)
+    S.validate_schedule(sched)
+    np.testing.assert_array_equal(
+        sched.masks, np.broadcast_to(base.slot_mask(), sched.masks.shape)
+    )
+    # gossip with zero edges can never be jointly connected
+    with pytest.raises(AssertionError, match="edges_per_round"):
+        S.gossip_schedule(T.Ring(6), edges_per_round=0)
+    # single-phase cycle: period 1, masks == the union's slot mask
+    one = S.make_schedule("cycle:star", 6)
+    assert one.period == 1
+    np.testing.assert_array_equal(one.masks[0], one.union.slot_mask())
+    S.validate_schedule(one)
+    # churn with p=0.0: nobody ever leaves => node layer is all-ones and
+    # the masks reduce to the base schedule's
+    full = S.churn_schedule(T.Complete(5), p=0.0, seed=0, period=4)
+    assert full.node_masks.all() and full.participation() == 1.0
+    np.testing.assert_array_equal(
+        full.masks,
+        np.broadcast_to(full.union.slot_mask(), full.masks.shape),
+    )
+
+
+def test_node_masks_merge_and_participation():
+    """The slot masks of a node-participation schedule are exactly
+    edge_mask & active(i) & active(neighbor) — and participation() is
+    the period-mean fraction of live nodes."""
+    base = S.drop_schedule(T.Complete(8), p=0.2, seed=3, period=4)
+    sched = S.churn_schedule(base, p=0.3, seed=1, period=6)
+    assert sched.period == 12  # lcm(4, 6)
+    nm = sched.node_masks
+    nbr = sched.union.neighbor_table()
+    for t in range(sched.period):
+        em = base.round_mask_host(t)
+        want = em & nm[t][:, None] & nm[t][nbr]
+        np.testing.assert_array_equal(sched.masks[t], want, err_msg=t)
+    assert sched.participation() == pytest.approx(float(nm.mean()))
+    assert 0.0 < sched.participation() < 1.0
+    # edge-only schedules report full participation
+    assert base.participation() == 1.0
+    assert base.round_node_mask(jnp.int32(0)) is None
+    np.testing.assert_array_equal(
+        base.round_node_mask_host(0), np.ones(8, bool)
+    )
+
+
+def test_sample_schedule_partial_participation():
+    """sample: activates ~round(frac * A) nodes per round (persistence
+    forcing may add a few) and every node appears within the period."""
+    sched = S.sample_schedule(T.Complete(10), frac=0.4, seed=0, period=12)
+    counts = sched.node_masks.sum(axis=1)
+    assert (counts >= 4).all() and counts.min() == 4
+    assert sched.node_masks.any(axis=0).all()
+    S.validate_schedule(sched)
+
+
+def test_metropolis_isolates_inactive_nodes():
+    """Round weights of a churn schedule give an inactive node the
+    identity row (degree 0 => no mixing in or out)."""
+    sched = S.churn_schedule(T.Complete(6), p=0.4, seed=1, period=8)
+    Ws = S.metropolis_schedule(sched)
+    hit = 0
+    for t in range(sched.period):
+        for i in np.nonzero(~sched.node_masks[t])[0]:
+            row = np.zeros(6)
+            row[i] = 1.0
+            np.testing.assert_allclose(Ws[t][i], row, err_msg=(t, i))
+            np.testing.assert_allclose(Ws[t][:, i], row, err_msg=(t, i))
+            hit += 1
+    assert hit > 0  # the schedule really has inactive nodes
 
 
 def test_schedule_degrees_and_costmodel():
@@ -135,6 +233,23 @@ def test_metropolis_schedule_per_round():
         np.testing.assert_allclose(W.sum(axis=1), 1.0, atol=1e-12)
     # ring round has no hub coupling beyond the ring edges
     assert Ws[0][2, 5] == 0.0 and Ws[1][2, 0] > 0.0
+
+
+def test_metropolis_schedule_cache():
+    """The per-schedule weight stack is cached OFF the frozen instance
+    (no object.__setattr__ back-door): repeated calls return the same
+    array, equal schedules get independent entries, and the instance
+    grows no new attributes."""
+    sched = S.cycle_schedule([T.Ring(5), T.Star(5)])
+    before = set(vars(sched))
+    a = S.metropolis_schedule(sched)
+    b = S.metropolis_schedule(sched)
+    assert a is b
+    assert set(vars(sched)) == before  # nothing smuggled onto the dataclass
+    assert "_metropolis_stack" not in vars(sched)
+    other = S.cycle_schedule([T.Ring(5), T.Star(5)])
+    np.testing.assert_array_equal(S.metropolis_schedule(other), a)
+    assert S.metropolis_schedule(other) is not a  # identity-keyed cache
 
 
 def test_gossip_baseline_over_schedule():
@@ -190,8 +305,12 @@ def _run_schedule(sched, prob, data, cfg, est, rounds):
         ("gossip:edges=3,base=ring,seed=1", 2500, 1.0),
         # eta < 1 exercises the non-lean per-edge u_edge/u_nbr EMA path
         ("drop:p=0.4,base=complete,seed=2", 2000, 0.5),
+        # node-level participation: churned-out / unsampled nodes freeze
+        # x and hold duals, yet the SAME fixed point is reached exactly
+        ("churn:p=0.2,base=complete,seed=0", 1800, 1.0),
+        ("sample:frac=0.5,base=complete,seed=0", 2200, 1.0),
     ],
-    ids=["cycle", "drop", "gossip", "drop_eta0.5"],
+    ids=["cycle", "drop", "gossip", "drop_eta0.5", "churn", "sample"],
 )
 def test_exact_convergence_time_varying(spec, rounds, eta):
     """SAGA + 8-bit quantization + per-edge EF reach the SAME fixed point
@@ -281,3 +400,104 @@ def test_static_singleton_cycle_matches_static_run():
     np.testing.assert_allclose(
         np.asarray(st_s.x), np.asarray(st_v.x), atol=1e-5, rtol=1e-5
     )
+
+
+# ---------------------------------------------------------------------------
+# Node-level participation semantics
+# ---------------------------------------------------------------------------
+
+
+def test_inactive_nodes_freeze_x_and_hold_edge_state():
+    """Asynchronous-ADMM node semantics in the LT-ADMM schedule step: an
+    inactive node's x is bitwise frozen for the round, and all its
+    incident edge state (z / s / s_tilde / EF mirrors) holds — its slots
+    are off by construction."""
+    prob = LogisticProblem(n_agents=6)
+    data = prob.make_data(jax.random.key(0))
+    q8 = compression.BBitQuantizer(bits=8)
+    cfg = admm.LTADMMConfig(compressor_x=q8, compressor_z=q8)
+    saga = vr.SagaTable(sample_grad=prob.sample_grad, m=prob.m)
+    sched = S.churn_schedule(T.Complete(6), p=0.3, seed=1, period=8)
+    ex = T.Exchange(sched.union)
+    st = admm.init(cfg, sched, ex, jnp.zeros((6, prob.n)))
+    step = jax.jit(
+        lambda st, k: admm.step(cfg, sched, ex, saga, st, data, k)
+    )
+    edge_fields = ("z", "s", "s_tilde", "x_hat_edge", "x_hat_nbr")
+    seen_inactive = 0
+    for t in range(sched.period):
+        prev = st
+        st = step(st, jax.random.key(t))
+        off = ~sched.round_node_mask_host(t)
+        for i in np.nonzero(off)[0]:
+            seen_inactive += 1
+            np.testing.assert_array_equal(
+                np.asarray(st.x[i]), np.asarray(prev.x[i]), err_msg=(t, i)
+            )
+            for f in edge_fields:
+                np.testing.assert_array_equal(
+                    np.asarray(getattr(st, f))[i],
+                    np.asarray(getattr(prev, f))[i],
+                    err_msg=(t, i, f),
+                )
+        on = np.nonzero(~off)[0]
+        assert (np.asarray(st.x[on]) != np.asarray(prev.x[on])).any()
+    assert seen_inactive > 0
+
+
+def test_gossip_baseline_holds_inactive_node_state():
+    """Every gossip baseline state field of an inactive node holds for
+    the round (the mixin's node-hold select), while active nodes move."""
+    prob = LogisticProblem(n_agents=6)
+    data = prob.make_data(jax.random.key(0))
+    sched = S.churn_schedule(T.Complete(6), p=0.3, seed=1, period=8)
+    est = vr.PlainSgd(batch_grad=prob.batch_grad)
+    algo = baselines.ChocoSGD(
+        sched, lr=0.05, compressor=compression.BBitQuantizer(bits=8),
+        grad_est=est,
+    )
+    st = algo.init(jax.random.normal(jax.random.key(1), (6, prob.n)))
+    step = jax.jit(algo.step)
+    seen_inactive = 0
+    for t in range(sched.period):
+        prev = st
+        st = step(st, data, jax.random.key(t))
+        off = ~sched.round_node_mask_host(t)
+        for i in np.nonzero(off)[0]:
+            seen_inactive += 1
+            for f in algo.state_fields:
+                np.testing.assert_array_equal(
+                    np.asarray(st[f])[i], np.asarray(prev[f])[i],
+                    err_msg=(t, i, f),
+                )
+        on = np.nonzero(~off)[0]
+        assert (np.asarray(st["x"])[on] != np.asarray(prev["x"])[on]).any()
+    assert seen_inactive > 0
+
+
+def test_participation_aware_cost_accounting():
+    """CostModel.for_topology on a node schedule charges gradient time
+    only for participating nodes (t_grad = t_g * participation) and wire
+    accounting only for live links."""
+    base = T.Complete(8)
+    sched = S.churn_schedule(base, p=0.4, seed=1, period=16)
+    cm = CostModel.for_topology(sched)
+    frac = sched.participation()
+    assert 0.0 < frac < 1.0
+    assert cm.participation == pytest.approx(frac)
+    assert cm.t_grad == pytest.approx(cm.t_g * frac)
+    assert cm.lt_admm_cc(100, 5) == pytest.approx(
+        104 * cm.t_grad + 2 * cm.t_comm
+    )
+    full = CostModel.for_topology(base)
+    assert full.participation == 1.0 and full.t_grad == full.t_g
+    assert cm.lt_admm_cc(100, 5) < full.lt_admm_cc(100, 5)
+    # wire bytes: inactive nodes' links are dark, so both the period-mean
+    # and any exact round charge at most the static union graph
+    params = {"w": jnp.zeros((50,))}
+    cfg = admm.LTADMMConfig()
+    assert admm.wire_bytes_per_round(cfg, sched, params) < \
+        admm.wire_bytes_per_round(cfg, base, params)
+    for t in range(sched.period):
+        assert admm.wire_bytes_at(cfg, sched, params, t) == \
+            int(np.max(sched.round_degrees(t))) * 2 * 200

@@ -1,0 +1,75 @@
+"""Property-based invariants of node-level participation masks.
+
+Requires ``hypothesis`` (optional dependency): the whole module skips
+cleanly when it is not installed.  The deterministic counterparts of
+these properties run in test_schedule.py; here we fuzz the builder
+parameter space:
+
+* masks stay edge-symmetric after node deactivation (an inactive
+  endpoint silences BOTH directions of every incident edge),
+* every node is active at least once per period (persistent node
+  activation — the asynchronous-ADMM exactness requirement),
+* the merged slot masks are exactly edge_mask & active(i) & active(j).
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as hst  # noqa: E402
+
+from repro.core import schedule as S  # noqa: E402
+from repro.core import topology as T  # noqa: E402
+
+BUILD = {
+    "churn": lambda base, q, seed, period: S.churn_schedule(
+        base, p=q, seed=seed, period=period
+    ),
+    "burst": lambda base, q, seed, period: S.burst_schedule(
+        base, fail=q, recover=0.5, seed=seed, period=period
+    ),
+    "sample": lambda base, q, seed, period: S.sample_schedule(
+        base, frac=max(q, 0.15), seed=seed, period=period
+    ),
+}
+
+
+def _base(n, kind):
+    return T.Complete(n) if kind == "complete" else T.Ring(n)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=hst.integers(min_value=3, max_value=8),
+    q=hst.floats(min_value=0.0, max_value=0.8),
+    seed=hst.integers(min_value=0, max_value=999),
+    period=hst.integers(min_value=2, max_value=8),
+    builder=hst.sampled_from(sorted(BUILD)),
+    base_kind=hst.sampled_from(["complete", "ring"]),
+)
+def test_participation_mask_invariants(n, q, seed, period, builder,
+                                       base_kind):
+    sched = BUILD[builder](_base(n, base_kind), q, seed, period)
+    nm = sched.node_masks
+    assert nm is not None and nm.shape == (sched.period, n)
+
+    # persistent node activation
+    assert nm.any(axis=0).all()
+
+    # merged-mask correctness: slot (i, s) fires iff the edge fires AND
+    # both endpoints are active — which implies edge symmetry
+    nbr = sched.union.neighbor_table()
+    um = sched.union.slot_mask()
+    for t in range(sched.period):
+        em = sched.masks[t]
+        assert not (em & ~um).any()  # inside the union
+        want_node = nm[t][:, None] & nm[t][nbr]
+        assert not (em & ~want_node).any(), t
+        rs = sched.union.reverse_slot
+        for s in range(sched.n_slots):
+            j = nbr[:, s]
+            np.testing.assert_array_equal(em[:, s], em[j, rs[s]], err_msg=(
+                t, s
+            ))
+
+    # the full validator agrees (joint connectivity via forcing included)
+    S.validate_schedule(sched)

@@ -247,6 +247,70 @@ def test_comp_kwargs_shim_warns_and_merges():
             == "qbit:bits=4"
 
 
+def test_per_iteration_shim_warns_and_delegates():
+    """CostModel.per_iteration warns DeprecationWarning and returns
+    exactly what the registered solver's round_cost hook computes —
+    including the COLD/DPDC full-gradient variants (FullGrad estimator
+    <-> full_grad=True)."""
+    from repro.core.baselines import ALL_BASELINES
+    from repro.core.costmodel import CostModel
+
+    cm = CostModel.for_topology(TOPO)
+    full = vr.FullGrad(full_grad=PROB.full_grad)
+    for name in ALL_BASELINES:
+        s = solver.make_solver(f"{name}:lr=0.1", TOPO, EX, SGD)
+        with pytest.warns(DeprecationWarning, match="per_iteration"):
+            assert cm.per_iteration(name, PROB.m) == pytest.approx(
+                s.round_cost(cm, PROB.m)
+            )
+    for name in ("cold", "dpdc"):
+        s = solver.make_solver(f"{name}:lr=0.1", TOPO, EX, full)
+        with pytest.warns(DeprecationWarning, match="per_iteration"):
+            assert cm.per_iteration(name, PROB.m, full_grad=True) == \
+                pytest.approx(s.round_cost(cm, PROB.m))
+    with pytest.warns(DeprecationWarning, match="per_iteration"):
+        with pytest.raises(ValueError):
+            cm.per_iteration("ltadmm", PROB.m)
+
+
+@pytest.mark.parametrize("name", sorted(ROUNDTRIP_SPECS))
+def test_wire_bytes_honors_explicit_t_on_static_graphs(name):
+    """Regression: an explicit ``t`` used to be silently ignored on
+    static graphs for LT-ADMM.  Every registered solver must now honor
+    it via the uniform exact-round path — and on a static graph every
+    round is the same constant, so t=0, t=5 and t=None all agree."""
+    spec = ROUNDTRIP_SPECS[name]
+    s = solver.make_solver(spec, TOPO, EX, _est_for(spec))
+    params = {"w": np.zeros((64,), np.float32)}
+    assert s.wire_bytes(params, t=0) == s.wire_bytes(params, t=5) \
+        == s.wire_bytes(params)
+
+
+def test_ltadmm_wire_bytes_t_agrees_with_admm_module():
+    """Solver-level and admm-module wire accounting agree round by
+    round, on static graphs and on schedules (packed solvers charge
+    the whole-plane message, so compare on the abstract plane)."""
+    from repro.core import packing
+
+    params = {"w": np.zeros((100,), np.float32)}
+    plane = packing.abstract_plane(packing.layout_of(params))
+    s = solver.make_solver("ltadmm:compressor=qbit:bits=8", TOPO, EX,
+                           _saga())
+    for t in (0, 3, 17):
+        assert s.wire_bytes(params, t=t) == admm.wire_bytes_at(
+            s.cfg, TOPO, plane, t
+        )
+    sched = drop_schedule(Complete(PROB.n_agents), p=0.3, seed=0)
+    ss = solver.make_solver("ltadmm:compressor=qbit:bits=8", sched,
+                            Exchange(sched.union), _saga())
+    per_round = [ss.wire_bytes(params, t=t) for t in range(sched.period)]
+    assert per_round == [
+        admm.wire_bytes_at(ss.cfg, sched, plane, t)
+        for t in range(sched.period)
+    ]
+    assert len(set(per_round)) > 1  # drop schedule varies by round
+
+
 @pytest.mark.slow
 def test_build_admm_train_shim_identical_trajectory():
     """build_admm_train warns DeprecationWarning and produces the same
