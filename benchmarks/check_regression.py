@@ -103,11 +103,14 @@ def main() -> None:
         # CPU runners and far too noisy to gate, but the trajectory is
         # worth eyeballing next to the solver numbers
         base_k = {r["name"]: r for r in base.get("kernels", [])}
-        print(f"\n{'kernel':38s} {'us_per_call':>20s}")
+        print(f"\n{'kernel':38s} {'us_per_call':>20s} {'delta':>8s}")
         for r in pr["kernels"]:
             b = base_k.get(r["name"], {})
+            b_us = b.get("us_per_call")
+            delta = (f"{r['us_per_call'] / b_us:7.2f}x"
+                     if b_us else "    new")
             print(f"{r['name']:38s} "
-                  f"{b.get('us_per_call')!s:>9s}->{r['us_per_call']!s:<9s}")
+                  f"{b_us!s:>9s}->{r['us_per_call']!s:<9s} {delta}")
 
     failures = check(pr, base)
     if failures:

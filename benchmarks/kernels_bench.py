@@ -12,6 +12,7 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import timeit
+from repro.kernels import prng
 from repro.kernels.quantize import ops as q_ops
 from repro.kernels.sparse_gather import ops as sg_ops
 
@@ -44,6 +45,29 @@ def run(print_rows=True, fast=False):
     vals = x[:k16]
     us = timeit(lambda: sg_ops.cyclic_scatter(vals, off, 1 << 16, gain=4.0))
     rows.append(("kernel/cyclic_scatter_64k_k16k", us, "gain=n/k"))
+
+    # fused plane path: compress ALL [A, S, N] messages of a round in ONE
+    # launch, randomness derived in-kernel from the counter PRNG (the
+    # packed-admm hot path with impl=pallas)
+    a, s, n, k = 4, 2, 1 << 14, 1 << 12
+    seed = prng.key_seed(jax.random.key(1))
+    sids = jnp.broadcast_to(jnp.arange(a, dtype=jnp.uint32)[:, None], (a, s))
+    rids = jnp.broadcast_to(jnp.arange(s, dtype=jnp.uint32)[None, :], (a, s))
+    xp = jax.random.normal(KEY, (a, s, n))
+    strides = prng.coprime_strides(n)
+    us = timeit(lambda: sg_ops.randk_gather_plane(
+        seed, sids, rids, xp, k=k, strides=strides
+    ), iters=2)
+    rows.append(("kernel/fused_randk_plane_8x16k", us,
+                 f"wire_ratio={n / k:.2f} launches=1"))
+    us = timeit(lambda: sg_ops.randk_scatter_plane(
+        seed, sids, rids, xp[..., :k], n=n, gain=n / k, strides=strides
+    ), iters=2)
+    rows.append(("kernel/fused_randk_scatter_8x16k", us, "gain=n/k"))
+    us = timeit(lambda: q_ops.quantize_plane(seed, sids, rids, xp, bits=8),
+                iters=2)
+    rows.append(("kernel/fused_quant8_plane_8x16k", us,
+                 "wire_ratio=4.00 launches=1"))
 
     if not fast:
         from repro.kernels.flash_attention import ops as flash_ops

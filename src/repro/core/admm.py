@@ -437,10 +437,12 @@ def _step_packed(
     arrays (x: ``[A, N]``, edge state: ``[A, S, N]``).
 
     Same math as ``_step_tree`` — each per-slot ``tree_map`` becomes one
-    vectorized expression over the slot axis, each per-slot compression
-    loop one ``vmap`` over (agent, slot), and the whole z-exchange ONE
-    batched routing call — so the compiled program is a handful of fused
-    ops per round instead of O(slots x leaves) small ones."""
+    vectorized expression over the slot axis, the whole z-exchange ONE
+    batched routing call, and compression ONE ``plane_compress`` per
+    message class: a single fused Pallas launch (in-kernel counter-PRNG
+    randomness, no index arrays in HBM) when the compressor resolves to
+    ``impl=pallas`` and supports it, else the bit-identical vmapped
+    per-(agent, slot) path."""
     A, S = topo.n_agents, topo.n_slots
     agent_ids = jnp.arange(A)
     aid2 = jnp.broadcast_to(agent_ids[:, None], (A, S))
@@ -448,6 +450,10 @@ def _step_packed(
     cx, cz = cfg.compressor_x, cfg.compressor_z
     nbr = jnp.asarray(topo.neighbor_table())  # [A, S]
     mask3 = _edge_mask(topo.slot_mask())
+    # fused-path base seeds: same salts as _key_x/_key_z, folded once
+    # here and per (sender, receiver) inside the kernel
+    bx = jax.random.fold_in(round_key, 11)
+    bz = jax.random.fold_in(round_key, 13)
 
     # ---- 1. local training ------------------------------------------------
     x_new = local_phase(cfg, topo, vr_est, state.x, state.z, data, round_key)
@@ -459,21 +465,18 @@ def _step_packed(
         else tree_lerp(state.u, state.x_hat, cfg.eta)
     )
 
-    def compress_x(aid, delta):
-        kx = _key_x(round_key, aid)
-        p = compression.compress_tree(cx, kx, delta)
-        return p, compression.decompress_tree(cx, kx, p, like)
-
-    m_x, dx = jax.vmap(compress_x)(agent_ids, x_new - u_new)
+    # x is broadcast to every neighbor: one payload per SENDER
+    m_x, dx = compression.plane_compress(
+        cx, lambda aid: _key_x(round_key, aid), bx,
+        agent_ids, None, x_new - u_new, like,
+    )
     x_hat_new = u_new + dx
 
     # ---- 5-6. sender-side error feedback for z (all slots at once) --------
-    def compress_z(aid, nid, delta):
-        kz = _key_z(round_key, aid, nid)
-        p = compression.compress_tree(cz, kz, delta)
-        return p, compression.decompress_tree(cz, kz, p, like)
-
-    m_z, rec_z = jax.vmap(jax.vmap(compress_z))(aid2, nbr, state.z - state.s)
+    m_z, rec_z = compression.plane_compress(
+        cz, lambda aid, nid: _key_z(round_key, aid, nid), bz,
+        aid2, nbr, state.z - state.s, like,
+    )
     z_hat_own = _masked(state.s + rec_z, mask3)
 
     # ---- the only cross-agent communication -------------------------------
@@ -487,20 +490,16 @@ def _step_packed(
         else tree_lerp(state.u_nbr, state.x_hat_nbr, cfg.eta)
     )
 
-    def decomp_x(sid, payload):
-        return compression.decompress_tree(
-            cx, _key_x(round_key, sid), payload, like
-        )
-
-    x_hat_nbr_new = u_nbr_new + jax.vmap(jax.vmap(decomp_x))(nbr, recv_x)
-
-    def decomp_z(sid, rid, payload):
-        return compression.decompress_tree(
-            cz, _key_z(round_key, sid, rid), payload, like
-        )
+    x_hat_nbr_new = u_nbr_new + compression.plane_decompress(
+        cx, lambda sid: _key_x(round_key, sid), bx,
+        nbr, None, recv_x, like, nd=2,
+    )
 
     z_hat_nbr = _masked(
-        state.s_tilde + jax.vmap(jax.vmap(decomp_z))(nbr, aid2, recv_z),
+        state.s_tilde + compression.plane_decompress(
+            cz, lambda sid, rid: _key_z(round_key, sid, rid), bz,
+            nbr, aid2, recv_z, like, nd=2,
+        ),
         mask3,
     )
 
@@ -780,6 +779,9 @@ def _step_schedule_packed(
     nbr = jnp.asarray(topo.neighbor_table())
     act = sched.round_mask(state.k)[:, :, None]  # [A, S, 1] traced bool
     node_k = sched.round_node_mask(state.k)  # [A] traced bool | None
+    # fused-path base seeds (salts of _key_xe/_key_z)
+    bxe = jax.random.fold_in(round_key, 17)
+    bz = jax.random.fold_in(round_key, 13)
 
     # ---- 1. local training: union degrees + full held dual sum ------------
     # Inactive nodes freeze their x / skip local training (see
@@ -792,13 +794,9 @@ def _step_schedule_packed(
     xh = state.x_hat_edge  # [A, S, N]
     u_adv = xh if cfg.lean else tree_lerp(state.u_edge, xh, cfg.eta)
 
-    def compress_xe(aid, nid, delta):
-        kx = _key_xe(round_key, aid, nid)
-        p = compression.compress_tree(cx, kx, delta)
-        return p, compression.decompress_tree(cx, kx, p, like)
-
-    m_x, rec_x = jax.vmap(jax.vmap(compress_xe))(
-        aid2, nbr, x_new[:, None] - u_adv
+    m_x, rec_x = compression.plane_compress(
+        cx, lambda aid, nid: _key_xe(round_key, aid, nid), bxe,
+        aid2, nbr, x_new[:, None] - u_adv, like,
     )
     x_hat_edge_new = jnp.where(act, u_adv + rec_x, xh)
     u_edge_new = (
@@ -806,12 +804,10 @@ def _step_schedule_packed(
     )
 
     # ---- 5-6. sender-side error feedback for z (gated below) --------------
-    def compress_z(aid, nid, delta):
-        kz = _key_z(round_key, aid, nid)
-        p = compression.compress_tree(cz, kz, delta)
-        return p, compression.decompress_tree(cz, kz, p, like)
-
-    m_z, rec_z = jax.vmap(jax.vmap(compress_z))(aid2, nbr, state.z - state.s)
+    m_z, rec_z = compression.plane_compress(
+        cz, lambda aid, nid: _key_z(round_key, aid, nid), bz,
+        aid2, nbr, state.z - state.s, like,
+    )
     z_hat_own = state.s + rec_z
 
     # ---- the only cross-agent communication (all slots, every round) ------
@@ -822,24 +818,18 @@ def _step_schedule_packed(
     xhn = state.x_hat_nbr
     un_adv = xhn if cfg.lean else tree_lerp(state.u_nbr, xhn, cfg.eta)
 
-    def decomp_xe(sid, rid, payload):
-        return compression.decompress_tree(
-            cx, _key_xe(round_key, sid, rid), payload, like
-        )
-
-    xhn_adv = un_adv + jax.vmap(jax.vmap(decomp_xe))(nbr, aid2, recv_x)
+    xhn_adv = un_adv + compression.plane_decompress(
+        cx, lambda sid, rid: _key_xe(round_key, sid, rid), bxe,
+        nbr, aid2, recv_x, like, nd=2,
+    )
     x_hat_nbr_new = jnp.where(act, xhn_adv, xhn)
     u_nbr_new = (
         None if cfg.lean else jnp.where(act, un_adv, state.u_nbr)
     )
 
-    def decomp_z(sid, rid, payload):
-        return compression.decompress_tree(
-            cz, _key_z(round_key, sid, rid), payload, like
-        )
-
-    z_hat_nbr = state.s_tilde + jax.vmap(jax.vmap(decomp_z))(
-        nbr, aid2, recv_z
+    z_hat_nbr = state.s_tilde + compression.plane_decompress(
+        cz, lambda sid, rid: _key_z(round_key, sid, rid), bz,
+        nbr, aid2, recv_z, like, nd=2,
     )
 
     # ---- 8. z / s / s̃ updates on active edges only (held elsewhere) ------

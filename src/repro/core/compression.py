@@ -4,9 +4,12 @@ A compressor here is *payload-typed*: ``compress`` returns the wire
 representation (what actually moves over ICI in a ``collective-permute``) and
 ``decompress`` reconstructs the dense tensor.  This is essential for the
 roofline to be honest — if we permuted the decompressed dense tensor the HLO
-collective bytes would not shrink at all.
+collective bytes would not shrink at all.  Payloads are ``Payload`` pytrees:
+named wire leaves (``payload["q"]``, ``payload["v"]``, ...) whose byte count
+(``payload.wire_bytes``) is derivable from the payload itself.
 
-Implemented compressors:
+Implemented compressors (each registered in ``COMPRESSORS`` via a
+``CompressorEntry``, mirroring ``core.solver.SOLVERS``):
 
 * ``BBitQuantizer`` — the paper's C1: unbiased stochastic b-bit quantizer with
   per-tensor inf-norm scale.  b bits per element = 1 sign bit + (b-1)
@@ -14,10 +17,12 @@ Implemented compressors:
   two 4-bit values packed per uint8 byte (b == 4).
 * ``RandK`` — the paper's C2, TPU-adapted: the index subset is derived from a
   PRNG key shared by sender and receiver (per edge and round), so **only the
-  k values** are transmitted — no indices on the wire.  Two samplers:
-  ``uniform`` (exact rand-k, O(n log n) sort — paper-scale problems) and
+  k values** are transmitted — no indices on the wire.  Three samplers:
+  ``uniform`` (exact rand-k, O(n log n) sort — paper-scale problems),
   ``block`` (uniformly-shifted cyclic block — O(k), unbiased, transformer
-  scale).
+  scale) and ``stride`` (seeded affine set ``(off + j*stride) % n`` with the
+  stride drawn from a static coprime table — unbiased, duplicate-free, and
+  derivable *inside* a Pallas kernel from the counter PRNG).
 * ``TopK`` — biased magnitude top-k (beyond-paper comparison; relies on error
   feedback for convergence; violates Assumption 3's unbiasedness).
 * ``Identity`` — no compression (recovers LT-ADMM of ref. [14]).
@@ -26,29 +31,143 @@ All compressors are unbiased with E||C(x)-x||^2 <= p ||x||^2 except TopK;
 ``variance_p`` reports the constant p per leaf (used in tests and napkin
 math).
 
-Every compressor accepts ``kernel=true`` in its spec (``"qbit:bits=8,
-kernel=true"``) to run its fused Pallas kernel — ``kernels/quantize``
-for the b-bit quantizer, ``kernels/sparse_gather`` for RandK/TopK.
-RandK/TopK keep their seed-synchronized index derivation, so their
-kernel path is bit-identical; the quantizer's stochastic-rounding
-stream differs (still unbiased).  On the packed plane
-(``core.packing``) each message is ONE leaf, so ``compress_tree`` is a
-single fused call.
+**Backend selection** is a first-class parameter: every compressor takes
+``impl={auto,jnp,pallas}`` (``"qbit:bits=8,impl=pallas"``), resolved
+centrally through ``kernels.quantize.kernel.resolve_interpret`` — ``auto``
+means compiled Pallas on TPU and plain jnp everywhere else.  The legacy
+``kernel=true``/``false`` spec param still parses (DeprecationWarning) and
+maps to ``impl=pallas``/``jnp``.  RandK/TopK keep their seed-synchronized
+index derivation on the leaf path, so their Pallas leaf path is
+bit-identical; the quantizer's stochastic-rounding stream differs (still
+unbiased).
+
+**Fused plane path**: on the packed plane (``core.packing``) the per-round
+compress of all ``[A, S, N]`` messages goes through ``plane_compress`` /
+``plane_decompress``.  With ``impl=pallas`` and a plane-capable compressor
+(qbit; randk block/stride) that is ONE fused Pallas launch for the whole
+plane: stochastic-rounding bits and RandK index sets are derived in-kernel
+from the counter PRNG (``kernels.prng``) seeded by (round key, sender,
+receiver), so no random stream or index array is ever materialized in HBM —
+only the round seed is shared, exactly like the wire format.  Any other
+configuration falls back to the vmapped per-message ``compress_tree`` path,
+bit-identical to the tree solvers.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Any
+import warnings
+from collections.abc import Mapping
+from typing import Protocol, runtime_checkable
 
 import jax
 import jax.numpy as jnp
 
-Payload = Any  # pytree of arrays — the wire representation of one leaf
+from repro.kernels import prng
+
+IMPLS = ("auto", "jnp", "pallas")
+
+
+def resolve_impl(impl: str) -> str:
+    """``auto`` -> backend choice (``pallas`` compiled on TPU, ``jnp``
+    elsewhere) via the same central switch the kernels use; explicit
+    ``jnp``/``pallas`` always win."""
+    if impl == "auto":
+        from repro.kernels.quantize.kernel import resolve_interpret
+
+        # resolve_interpret(None) is True off-TPU: interpret-mode Pallas
+        # is a correctness tool, not a fast path — auto stays on jnp.
+        return "jnp" if resolve_interpret(None) else "pallas"
+    if impl not in IMPLS:
+        raise ValueError(f"impl must be one of {IMPLS}, got {impl!r}")
+    return impl
 
 
 def _flat(x):
     return jnp.reshape(x, (-1,))
+
+
+def _leaf_nbytes(leaf) -> int:
+    shape = getattr(leaf, "shape", ())
+    dtype = getattr(leaf, "dtype", jnp.float32)
+    return math.prod(shape) * jnp.dtype(dtype).itemsize
+
+
+@jax.tree_util.register_pytree_with_keys_class
+class Payload(Mapping):
+    """Typed wire representation of one compressed message.
+
+    A pytree node with NAMED leaves — ``payload["q"]``, ``payload["v"]``,
+    ... — that vmaps/scans/permutes like the plain dict it replaces, plus
+    ``wire_bytes``: the byte count of the leaves as stored, derivable
+    from the payload itself (per message when leaves are unbatched; the
+    whole batch when they carry lead dims).  Compressors' ``wire_bytes``
+    *methods* remain the shape-only accounting used by the cost model.
+    """
+
+    __slots__ = ("_leaves",)
+
+    def __init__(self, **leaves):
+        # canonical (sorted) key order: flatten/unflatten roundtrips and
+        # equality are insensitive to construction order
+        self._leaves = dict(sorted(leaves.items()))
+
+    def __getitem__(self, k):
+        return self._leaves[k]
+
+    def __iter__(self):
+        return iter(self._leaves)
+
+    def __len__(self):
+        return len(self._leaves)
+
+    def __repr__(self):
+        inner = ", ".join(f"{k}={v!r}" for k, v in sorted(self._leaves.items()))
+        return f"Payload({inner})"
+
+    @property
+    def wire_bytes(self) -> int:
+        return sum(_leaf_nbytes(v) for v in self._leaves.values())
+
+    def tree_flatten_with_keys(self):
+        items = sorted(self._leaves.items())
+        return (
+            tuple((jax.tree_util.DictKey(k), v) for k, v in items),
+            tuple(k for k, _ in items),
+        )
+
+    @classmethod
+    def tree_unflatten(cls, keys, leaves):
+        return cls(**dict(zip(keys, leaves)))
+
+
+@runtime_checkable
+class Compressor(Protocol):
+    """What every registered compressor implements (leaf granularity).
+
+    ``compress(key, x) -> Payload`` / ``decompress(key, payload, like)``
+    are the seed-synchronized wire codec; ``variance_p``/``wire_bytes``
+    are the Assumption-3 constant and the cost model's byte accounting.
+    Plane-capable compressors additionally provide ``compress_plane`` /
+    ``decompress_plane`` (see ``plane_compress``).
+    """
+
+    name: str
+    unbiased: bool
+    impl: str
+
+    def compress(self, key, x) -> Payload: ...
+
+    def decompress(self, key, payload, like) -> jax.Array: ...
+
+    def variance_p(self, shape) -> float: ...
+
+    def wire_bytes(self, shape, dtype) -> int: ...
+
+
+def _check_impl(impl: str):
+    if impl not in IMPLS:
+        raise ValueError(f"impl must be one of {IMPLS}, got {impl!r}")
 
 
 # ---------------------------------------------------------------------------
@@ -58,15 +177,19 @@ def _flat(x):
 
 @dataclasses.dataclass(frozen=True)
 class Identity:
-    # kernel is accepted (and ignored — there is nothing to fuse) so the
-    # `kernel=true` spec param works uniformly across every compressor
-    kernel: bool = False
+    # ``impl`` is explicitly allowlisted (validated, then ignored — there
+    # is nothing to fuse) so backend selection works uniformly across
+    # every compressor spec; any OTHER param is a spec error.
+    impl: str = "auto"
     name: str = "identity"
     unbiased: bool = True
 
+    def __post_init__(self):
+        _check_impl(self.impl)
+
     def compress(self, key, x) -> Payload:
         del key
-        return {"v": x}
+        return Payload(v=x)
 
     def decompress(self, key, payload, like) -> jax.Array:
         del key, like
@@ -87,32 +210,39 @@ class BBitQuantizer:
     C(x) = (||x||_inf / s) * sign(x) ∘ floor(s |x| / ||x||_inf + kappa),
     kappa ~ U[0,1)^n  =>  E[C(x)] = x  (unbiased for any s >= 1).
 
-    ``kernel=True`` (spec: ``qbit:bits=8,kernel=true``) routes
-    compress/decompress through the fused Pallas pipeline in
-    ``repro.kernels.quantize`` — compiled on TPU, interpret elsewhere.
-    Same quantizer family and wire format; the stochastic-rounding
-    stream differs (raw uint32 bits vs ``jax.random.uniform``), so the
-    kernel path is unbiased and contractive but not bit-identical to
-    the jnp path.
+    ``impl=pallas`` (spec: ``qbit:bits=8,impl=pallas``; ``auto`` resolves
+    to it on TPU) routes through the fused Pallas pipeline in
+    ``repro.kernels.quantize`` — on the packed plane the whole ``[A,S,N]``
+    compress is ONE launch with in-kernel counter-PRNG rounding bits.
+    Same quantizer family and wire format; the stochastic-rounding stream
+    differs from the jnp path (raw uint32 bits vs ``jax.random.uniform``),
+    so the Pallas path is unbiased and contractive but not bit-identical.
     """
 
     bits: int = 8
-    kernel: bool = False
+    impl: str = "auto"
     name: str = "qbit"
     unbiased: bool = True
 
     def __post_init__(self):
-        assert self.bits in (4, 8), "wire packing implemented for b in {4, 8}"
+        _check_impl(self.impl)
+        if self.bits not in (4, 8):
+            raise ValueError(
+                f"wire packing implemented for bits in (4, 8), got {self.bits}"
+            )
 
     @property
     def levels(self) -> int:
         return 2 ** (self.bits - 1) - 1
 
+    def _pallas(self) -> bool:
+        return resolve_impl(self.impl) == "pallas"
+
     def compress(self, key, x) -> Payload:
-        if self.kernel:
+        if self._pallas():
             from repro.kernels.quantize import ops as qops
 
-            return qops.quantize_tensor(key, x, bits=self.bits)
+            return Payload(**qops.quantize_tensor(key, x, bits=self.bits))
         xf = _flat(x).astype(jnp.float32)
         scale = jnp.maximum(jnp.max(jnp.abs(xf)), jnp.finfo(jnp.float32).tiny)
         kappa = jax.random.uniform(key, xf.shape)
@@ -122,11 +252,11 @@ class BBitQuantizer:
         q = q.astype(jnp.int8)
         if self.bits == 4:
             q = _pack4(q)
-        return {"q": q, "scale": scale}
+        return Payload(q=q, scale=scale)
 
     def decompress(self, key, payload, like) -> jax.Array:
         del key
-        if self.kernel:
+        if self._pallas():
             from repro.kernels.quantize import ops as qops
 
             return qops.dequantize_tensor(
@@ -138,6 +268,27 @@ class BBitQuantizer:
             q = _unpack4(q, n)
         xf = payload["scale"] * q.astype(jnp.float32) / self.levels
         return jnp.reshape(xf, like.shape).astype(like.dtype)
+
+    # -- fused plane path (one Pallas launch for all [A, S, N] messages) --
+
+    def plane_ready(self) -> bool:
+        return True
+
+    def compress_plane(self, seed, sids, rids, x) -> Payload:
+        from repro.kernels.quantize import ops as qops
+
+        q, scale = qops.quantize_plane(seed, sids, rids, x, bits=self.bits)
+        return Payload(q=q, scale=scale)
+
+    def decompress_plane(self, seed, sids, rids, payload, like) -> jax.Array:
+        del seed, sids, rids
+        from repro.kernels.quantize import ops as qops
+
+        n = math.prod(like.shape)
+        out = qops.dequantize_plane(
+            payload["q"], payload["scale"], n=n, bits=self.bits
+        )
+        return out.reshape(out.shape[:-1] + like.shape).astype(like.dtype)
 
     def variance_p(self, shape) -> float:
         # E||C(x)-x||^2 <= (n / (4 s^2)) * (||x||_inf^2 / ||x||^2) * ||x||^2
@@ -180,14 +331,31 @@ class RandK:
     sampler:  "uniform" — exact uniform k-subset (permutation-based);
               "block"   — cyclic contiguous block at a uniform random offset
                           (each coordinate still has inclusion prob. k/n, so
-                          C stays unbiased; O(k) instead of O(n log n)).
+                          C stays unbiased; O(k) instead of O(n log n));
+              "stride"  — seeded affine set (off + j*stride) % n, stride
+                          from a static table coprime to n: same O(k) and
+                          unbiasedness as block (inclusion prob. k/n for
+                          any fixed coprime stride), but decorrelated
+                          coordinates AND derivable inside a Pallas kernel
+                          by the counter PRNG (the fused plane path).
     """
 
     fraction: float = 0.25
     sampler: str = "uniform"
-    kernel: bool = False
+    impl: str = "auto"
     name: str = "randk"
     unbiased: bool = True
+
+    def __post_init__(self):
+        _check_impl(self.impl)
+        if self.sampler not in ("uniform", "block", "stride"):
+            raise ValueError(
+                "sampler must be one of ('uniform', 'block', 'stride'), "
+                f"got {self.sampler!r}"
+            )
+
+    def _pallas(self) -> bool:
+        return resolve_impl(self.impl) == "pallas"
 
     def _k(self, n: int) -> int:
         return max(1, int(round(self.fraction * n)))
@@ -200,25 +368,29 @@ class RandK:
         if self.sampler == "uniform":
             perm = jax.random.permutation(key, n)
             return perm[:k]
+        if self.sampler == "stride":
+            return prng.affine_indices(
+                prng.key_seed(key), n, k, prng.coprime_strides(n)
+            )
         return (self._offset(key, n) + jnp.arange(k)) % n
 
     def compress(self, key, x) -> Payload:
         xf = _flat(x)
         n = xf.shape[0]
-        if self.kernel:
+        if self._pallas():
             from repro.kernels.sparse_gather import ops as sg
 
             if self.sampler == "block":  # fused dynamic-slice window
-                return {"v": sg.cyclic_gather(
+                return Payload(v=sg.cyclic_gather(
                     xf, self._offset(key, n), self._k(n)
-                )}
-            return {"v": sg.sparse_gather(xf, self._indices(key, n))}
-        return {"v": jnp.take(xf, self._indices(key, n), axis=0)}
+                ))
+            return Payload(v=sg.sparse_gather(xf, self._indices(key, n)))
+        return Payload(v=jnp.take(xf, self._indices(key, n), axis=0))
 
     def decompress(self, key, payload, like) -> jax.Array:
         n = math.prod(like.shape)
         k = self._k(n)
-        if self.kernel:
+        if self._pallas():
             from repro.kernels.sparse_gather import ops as sg
 
             if self.sampler == "block":
@@ -234,6 +406,35 @@ class RandK:
         out = jnp.zeros((n,), payload["v"].dtype)
         out = out.at[idx].set((n / k) * payload["v"])
         return jnp.reshape(out, like.shape).astype(like.dtype)
+
+    # -- fused plane path: index sets derived in-kernel, never in HBM --
+
+    def _strides(self, n: int) -> tuple:
+        return (1,) if self.sampler == "block" else prng.coprime_strides(n)
+
+    def plane_ready(self) -> bool:
+        # "uniform" needs a per-message O(n log n) permutation — no
+        # in-kernel derivation; it falls back to the vmapped path.
+        return self.sampler in ("block", "stride")
+
+    def compress_plane(self, seed, sids, rids, x) -> Payload:
+        from repro.kernels.sparse_gather import ops as sg
+
+        n = x.shape[-1]
+        return Payload(v=sg.randk_gather_plane(
+            seed, sids, rids, x, k=self._k(n), strides=self._strides(n)
+        ))
+
+    def decompress_plane(self, seed, sids, rids, payload, like) -> jax.Array:
+        from repro.kernels.sparse_gather import ops as sg
+
+        n = math.prod(like.shape)
+        k = self._k(n)
+        out = sg.randk_scatter_plane(
+            seed, sids, rids, payload["v"], n=n, gain=n / k,
+            strides=self._strides(n),
+        )
+        return out.reshape(out.shape[:-1] + like.shape).astype(like.dtype)
 
     def variance_p(self, shape) -> float:
         n = 1
@@ -253,9 +454,15 @@ class TopK:
     """Biased magnitude top-k (needs indices on the wire: values + int32 idx)."""
 
     fraction: float = 0.25
-    kernel: bool = False
+    impl: str = "auto"
     name: str = "topk"
     unbiased: bool = False
+
+    def __post_init__(self):
+        _check_impl(self.impl)
+
+    def _pallas(self) -> bool:
+        return resolve_impl(self.impl) == "pallas"
 
     def _k(self, n: int) -> int:
         return max(1, int(round(self.fraction * n)))
@@ -266,17 +473,17 @@ class TopK:
         k = self._k(xf.shape[0])
         v, idx = jax.lax.top_k(jnp.abs(xf), k)
         del v
-        if self.kernel:
+        if self._pallas():
             from repro.kernels.sparse_gather import ops as sg
 
-            return {"v": sg.sparse_gather(xf, idx),
-                    "idx": idx.astype(jnp.int32)}
-        return {"v": jnp.take(xf, idx), "idx": idx.astype(jnp.int32)}
+            return Payload(v=sg.sparse_gather(xf, idx),
+                           idx=idx.astype(jnp.int32))
+        return Payload(v=jnp.take(xf, idx), idx=idx.astype(jnp.int32))
 
     def decompress(self, key, payload, like) -> jax.Array:
         del key
         n = math.prod(like.shape)
-        if self.kernel:
+        if self._pallas():
             from repro.kernels.sparse_gather import ops as sg
 
             out = sg.sparse_scatter(payload["v"], payload["idx"], n)
@@ -313,7 +520,7 @@ def compress_tree(comp, key, tree) -> Payload:
 def decompress_tree(comp, key, payload_tree, like_tree):
     likes, treedef = jax.tree.flatten(like_tree)
     keys = jax.random.split(key, len(likes))
-    # payload_tree has dict nodes at leaf positions of like_tree
+    # payload_tree has Payload nodes at leaf positions of like_tree
     payloads = treedef.flatten_up_to(payload_tree)
     outs = [
         comp.decompress(k, p, jax.ShapeDtypeStruct(x.shape, x.dtype))
@@ -328,12 +535,129 @@ def tree_wire_bytes(comp, tree) -> int:
     )
 
 
-COMPRESSORS = {
-    "identity": Identity,
-    "qbit": BBitQuantizer,
-    "randk": RandK,
-    "topk": TopK,
+# ---------------------------------------------------------------------------
+# Plane-level helpers: whole-round [.., N] message batches
+# ---------------------------------------------------------------------------
+
+
+def _use_fused(comp) -> bool:
+    ready = getattr(comp, "plane_ready", None)
+    return (
+        ready is not None
+        and ready()
+        and resolve_impl(comp.impl) == "pallas"
+    )
+
+
+def _vmap_n(fn, nd: int):
+    for _ in range(nd):
+        fn = jax.vmap(fn)
+    return fn
+
+
+def plane_compress(comp, keyfn, base_key, senders, receivers, delta, like):
+    """Compress every message of a batched plane ``delta [..., N]`` and
+    return ``(payload_tree, reconstruction)`` (the reconstruction feeds
+    error feedback — both endpoints must see the SAME decompress).
+
+    Fused route (``impl=pallas`` + plane-capable compressor): ONE Pallas
+    launch for the whole plane, per-message randomness derived in-kernel
+    from ``(key_seed(base_key), sender, receiver)`` — ``receivers=None``
+    marks one-to-all broadcast messages.  Otherwise: the exact vmapped
+    per-message ``compress_tree(comp, keyfn(ids...), ...)`` path the tree
+    solvers use, bit-identical to pre-plane behavior.
+    """
+    if _use_fused(comp):
+        seed = prng.key_seed(base_key)
+        p = comp.compress_plane(seed, senders, receivers, delta)
+        rec = comp.decompress_plane(seed, senders, receivers, p, like)
+        return p, rec
+    nd = delta.ndim - 1
+
+    if receivers is None:
+        def one(s, d):
+            kk = keyfn(s)
+            p = compress_tree(comp, kk, d)
+            return p, decompress_tree(comp, kk, p, like)
+
+        return _vmap_n(one, nd)(senders, delta)
+
+    def one(s, r, d):
+        kk = keyfn(s, r)
+        p = compress_tree(comp, kk, d)
+        return p, decompress_tree(comp, kk, p, like)
+
+    return _vmap_n(one, nd)(senders, receivers, delta)
+
+
+def plane_decompress(comp, keyfn, base_key, senders, receivers, payload,
+                     like, nd: int):
+    """Receiver-side reconstruction of a batched payload plane —
+    re-derives the SAME per-message randomness as ``plane_compress`` (the
+    seeded wire format: only ``base_key`` round state is shared).  ``nd``
+    is the number of batch dims on the payload leaves."""
+    if _use_fused(comp):
+        seed = prng.key_seed(base_key)
+        return comp.decompress_plane(seed, senders, receivers, payload, like)
+
+    if receivers is None:
+        def one(s, p):
+            return decompress_tree(comp, keyfn(s), p, like)
+
+        return _vmap_n(one, nd)(senders, payload)
+
+    def one(s, r, p):
+        return decompress_tree(comp, keyfn(s, r), p, like)
+
+    return _vmap_n(one, nd)(senders, receivers, payload)
+
+
+# ---------------------------------------------------------------------------
+# Registry + spec parsing (mirrors core.solver's SOLVERS entries)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressorEntry:
+    """One registered compressor: class + the spec params it accepts
+    (``get_compressor`` validates against ``params`` BEFORE construction,
+    so misspellings fail with the valid names, not a TypeError)."""
+
+    name: str
+    cls: type
+    params: frozenset
+    doc: str = ""
+
+
+def _entry(cls, doc: str) -> CompressorEntry:
+    name = cls.__dataclass_fields__["name"].default
+    params = frozenset(
+        f.name
+        for f in dataclasses.fields(cls)
+        if f.init and f.name not in ("name", "unbiased")
+    )
+    return CompressorEntry(name=name, cls=cls, params=params, doc=doc)
+
+
+COMPRESSORS: dict[str, CompressorEntry] = {
+    e.name: e
+    for e in (
+        _entry(Identity, "no compression (exact LT-ADMM)"),
+        _entry(BBitQuantizer, "unbiased stochastic b-bit quantizer (C1)"),
+        _entry(RandK, "seed-synchronized rand-k, zero index bytes (C2)"),
+        _entry(TopK, "biased magnitude top-k (values + indices, needs EF)"),
+    )
 }
+
+
+def compressor_entry(name: str) -> CompressorEntry:
+    try:
+        return COMPRESSORS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown compressor {name!r}; choose from "
+            f"{sorted(COMPRESSORS)}"
+        ) from None
 
 
 def coerce_param(v):
@@ -351,22 +675,13 @@ def coerce_param(v):
     return v
 
 
-def get_compressor(spec: str, **kw):
-    """Compressor from a spec string: ``name[:k=v,...]``.
-
-    ``get_compressor("qbit:bits=4")``,
-    ``get_compressor("randk:fraction=0.25,sampler=block")``.  When the
-    spec is nested inside an outer comma grammar (solver specs), ``|``
-    is accepted in place of ``,``.  Explicit keyword arguments are the
-    legacy construction path (``get_compressor("qbit", bits=4)``) and
-    override spec params on collision.
-    """
+def _parse_spec(spec: str):
+    """``name[:k=v,...]`` -> (entry, params) with unknown/misspelled
+    params rejected up front (naming the valid ones) and the legacy
+    ``kernel=`` param mapped onto ``impl=``.  Returns ``shim_used`` so
+    ``get_compressor`` can warn exactly when the deprecated form ran."""
     name, _, rest = spec.partition(":")
-    if name not in COMPRESSORS:
-        raise ValueError(
-            f"unknown compressor {name!r}; choose from "
-            f"{sorted(COMPRESSORS)}"
-        )
+    entry = compressor_entry(name)
     params = {}
     for item in rest.replace("|", ",").split(","):
         if not item:
@@ -378,8 +693,64 @@ def get_compressor(spec: str, **kw):
                 f"(expected k=v)"
             )
         params[k.strip()] = coerce_param(v.strip())
-    params.update(kw)
+    return entry, params
+
+
+def _apply_kernel_shim(params: dict) -> bool:
+    if "kernel" not in params:
+        return False
+    flag = params.pop("kernel")
+    if not isinstance(flag, bool):
+        raise ValueError(f"kernel= expects true/false, got {flag!r}")
+    params.setdefault("impl", "pallas" if flag else "jnp")
+    return True
+
+
+def _construct(entry: CompressorEntry, params: dict):
+    unknown = sorted(set(params) - entry.params)
+    if unknown:
+        raise ValueError(
+            f"compressor {entry.name!r} got unknown param(s) {unknown}; "
+            f"valid params: {sorted(entry.params)}"
+        )
     try:
-        return COMPRESSORS[name](**params)
+        return entry.cls(**params)
     except TypeError as e:
-        raise ValueError(f"bad params for compressor {name!r}: {e}") from None
+        raise ValueError(
+            f"bad params for compressor {entry.name!r}: {e}"
+        ) from None
+
+
+def validate_spec(spec: str) -> None:
+    """Parse-time validation of a compressor spec (used by the solver
+    grammar so ``make_solver("ltadmm:compressor=qbit:bit=4", ...)`` fails
+    up front, naming qbit's valid params).  Raises exactly what
+    ``get_compressor`` would; never warns."""
+    entry, params = _parse_spec(spec)
+    _apply_kernel_shim(params)
+    _construct(entry, params)
+
+
+def get_compressor(spec: str, **kw) -> Compressor:
+    """Compressor from a spec string: ``name[:k=v,...]``.
+
+    ``get_compressor("qbit:bits=4")``,
+    ``get_compressor("randk:fraction=0.25,sampler=block")``.  When the
+    spec is nested inside an outer comma grammar (solver specs), ``|``
+    is accepted in place of ``,``.  Explicit keyword arguments are the
+    legacy construction path (``get_compressor("qbit", bits=4)``) and
+    override spec params on collision.  The deprecated ``kernel=true``
+    param maps to ``impl=pallas`` (``false`` -> ``impl=jnp``) with a
+    DeprecationWarning.
+    """
+    entry, params = _parse_spec(spec)
+    params.update(kw)
+    if _apply_kernel_shim(params):
+        warnings.warn(
+            "compressor param kernel= is deprecated; use "
+            "impl={auto,jnp,pallas} (kernel=true -> impl=pallas, "
+            "kernel=false -> impl=jnp)",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+    return _construct(entry, params)

@@ -284,6 +284,11 @@ def parse_solver_spec(spec: str):
                 f"solver {entry.name!r} got unknown param {item!r} "
                 f"(accepted: {sorted(entry.params)})"
             )
+    # nested compressor specs validate at parse time, so a misspelled
+    # param ("compressor=qbit:bit=4") fails here naming qbit's valid
+    # params — not as a construction error deep inside the factory
+    for k in entry.nested & kw.keys():
+        compression.validate_spec(kw[k])
     return entry, kw
 
 

@@ -111,6 +111,77 @@ def quantize(x_flat, rnd_bits, scale, *, bits=8, interpret=None):
     raise ValueError(bits)
 
 
+# ---------------------------------------------------------------------------
+# Fused plane quantize: [M, n] messages, ONE launch, in-kernel PRNG
+# ---------------------------------------------------------------------------
+
+
+def _plane_counter(tile):
+    """Global element counter for grid position (row-local): the kappa
+    stream restarts per message, so sender and receiver only need the
+    per-message seed to agree on every rounding decision."""
+    i = pl.program_id(1)
+    j = jax.lax.broadcasted_iota(jnp.int32, (1, tile), 1) + i * tile
+    return j.astype(jnp.uint32)
+
+
+def _quantize_plane_kernel(seed_ref, sid_ref, rid_ref, scale_ref, x_ref,
+                           q_ref, *, levels, bits):
+    from repro.kernels import prng
+
+    es = prng.fold(
+        (seed_ref[0], seed_ref[1]), sid_ref[0], rid_ref[0]
+    )
+    kappa = prng.uniform01(prng.random_bits(es, _plane_counter(BLOCK)))
+    x = x_ref[...].astype(jnp.float32)
+    q = jnp.sign(x) * jnp.floor(levels * jnp.abs(x) / scale_ref[0] + kappa)
+    if bits == 8:
+        q_ref[...] = q.astype(jnp.int8)
+    else:
+        qi = q.astype(jnp.int32) + 8  # offset-8 nibbles in [1, 15]
+        hi = qi[:, 0::2]
+        lo = qi[:, 1::2]
+        q_ref[...] = ((hi << 4) | lo).astype(jnp.uint8)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "interpret"))
+def quantize_plane(seed, sids, rids, x, scale, *, bits=8, interpret=None):
+    """Fused quantization of a whole message plane: ONE pallas launch.
+
+    ``x [M, n]`` f32 (n % BLOCK == 0) holds M gathered messages (the
+    slot-batched ``[A, S, N]`` plane flattened to rows); ``sids``/``rids``
+    [M] uint32 are the per-message (sender, receiver) ids and ``seed``
+    is the round's ``(u32, u32)`` pair — the stochastic-rounding kappas
+    are derived in-kernel from (seed, sender, receiver, element), so no
+    random stream is ever materialized in HBM (the vmapped leaf path
+    reads a precomputed ``jax.random.bits`` array per message).
+    ``scale [M]`` is the per-message inf-norm from the cheap jnp pass.
+    """
+    interpret = resolve_interpret(interpret)
+    m, n = x.shape
+    assert n % BLOCK == 0, n
+    levels = float(2 ** (bits - 1) - 1)
+    grid = (m, n // BLOCK)
+    out_block = BLOCK if bits == 8 else BLOCK // 2
+    out_n = n if bits == 8 else n // 2
+    return pl.pallas_call(
+        functools.partial(_quantize_plane_kernel, levels=levels, bits=bits),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((2,), lambda m_, i: (0,)),
+            pl.BlockSpec((1,), lambda m_, i: (m_,)),
+            pl.BlockSpec((1,), lambda m_, i: (m_,)),
+            pl.BlockSpec((1,), lambda m_, i: (m_,)),
+            pl.BlockSpec((1, BLOCK), lambda m_, i: (m_, i)),
+        ],
+        out_specs=pl.BlockSpec((1, out_block), lambda m_, i: (m_, i)),
+        out_shape=jax.ShapeDtypeStruct(
+            (m, out_n), jnp.int8 if bits == 8 else jnp.uint8
+        ),
+        interpret=interpret,
+    )(jnp.stack(seed), sids, rids, scale, x)
+
+
 @functools.partial(
     jax.jit, static_argnames=("bits", "n", "out_dtype", "interpret")
 )

@@ -12,7 +12,12 @@ import math
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.quantize.kernel import BLOCK, dequantize, quantize
+from repro.kernels.quantize.kernel import (
+    BLOCK,
+    dequantize,
+    quantize,
+    quantize_plane as _quantize_plane_kernel,
+)
 
 
 def _pad_to_block(x_flat):
@@ -21,6 +26,60 @@ def _pad_to_block(x_flat):
     if pad:
         x_flat = jnp.concatenate([x_flat, jnp.zeros((pad,), x_flat.dtype)])
     return x_flat, n
+
+
+def wire_len(n, bits):
+    """Exact wire bytes of the quantized stream: one int8 per element
+    (b=8) or one nibble-packed uint8 per element pair (b=4)."""
+    return n if bits == 8 else -(-n // 2)
+
+
+def quantize_plane(seed, sids, rids, x, *, bits=8, interpret=None):
+    """Fused quantization of a batch of messages ``x [..., n]`` — ONE
+    Pallas launch for the whole plane, stochastic-rounding bits derived
+    in-kernel from ``(seed, sender, receiver, element)`` so no random
+    stream is materialized in HBM.  ``rids=None`` marks one-to-all
+    broadcast messages.  Returns ``(q [..., wire_len], scale [...])``.
+    """
+    from repro.kernels import prng
+    from repro.kernels.sparse_gather.ops import _plane_ids
+
+    lead, n = x.shape[:-1], x.shape[-1]
+    xf = x.reshape(-1, n).astype(jnp.float32)
+    scale = jnp.maximum(
+        jnp.max(jnp.abs(xf), axis=-1), jnp.finfo(jnp.float32).tiny
+    )
+    n_pad = -(-n // BLOCK) * BLOCK
+    if n_pad != n:
+        xf = jnp.concatenate(
+            [xf, jnp.zeros((xf.shape[0], n_pad - n), xf.dtype)], axis=-1
+        )
+    q = _quantize_plane_kernel(
+        seed,
+        _plane_ids(sids, lead, 0),
+        _plane_ids(rids, lead, prng.BROADCAST),
+        xf,
+        scale,
+        bits=bits,
+        interpret=interpret,
+    )
+    nb = wire_len(n, bits)
+    return q[:, :nb].reshape(lead + (nb,)), scale.reshape(lead)
+
+
+def dequantize_plane(q, scale, *, n, bits=8, out_dtype=jnp.float32):
+    """Elementwise inverse of ``quantize_plane`` (no PRNG needed) — a
+    plain jnp expression XLA fuses on its own."""
+    levels = float(2 ** (bits - 1) - 1)
+    if bits == 8:
+        qf = q.astype(jnp.float32)
+    else:
+        p = q.astype(jnp.int32)
+        hi = ((p >> 4) & 0xF) - 8
+        lo = (p & 0xF) - 8
+        qf = jnp.stack([hi, lo], axis=-1).reshape(q.shape[:-1] + (-1,))
+        qf = qf[..., :n].astype(jnp.float32)
+    return (scale[..., None] * qf / levels).astype(out_dtype)
 
 
 def quantize_tensor(key, x, *, bits=8, interpret=None):
@@ -33,18 +92,25 @@ def quantize_tensor(key, x, *, bits=8, interpret=None):
     interpret elsewhere)."""
     flat = jnp.reshape(x, (-1,)).astype(jnp.float32)
     scale = jnp.maximum(jnp.max(jnp.abs(flat)), jnp.finfo(jnp.float32).tiny)
-    padded, _ = _pad_to_block(flat)
+    padded, n = _pad_to_block(flat)
     rnd = jax.random.bits(key, (padded.shape[0],), jnp.uint32)
     q = quantize(padded, rnd, scale, bits=bits, interpret=interpret)
-    return {"q": q, "scale": scale}
+    # exact wire bytes on the payload (the pad tail is derivable, so it
+    # never travels — Payload.wire_bytes stays honest)
+    return {"q": q[: wire_len(n, bits)], "scale": scale}
 
 
 def dequantize_tensor(payload, shape, dtype=jnp.float32, *, bits=8,
                       interpret=None):
     n = math.prod(shape)
-    n_padded = payload["q"].shape[0] * (1 if bits == 8 else 2)
+    q, _ = _pad_to_block(payload["q"]) if bits == 8 else (payload["q"], n)
+    if bits == 4:  # re-pad the nibble stream to BLOCK/2-aligned bytes
+        pad = (-q.shape[0]) % (BLOCK // 2)
+        if pad:
+            q = jnp.concatenate([q, jnp.full((pad,), 0x88, q.dtype)])
+    n_padded = q.shape[0] * (1 if bits == 8 else 2)
     x = dequantize(
-        payload["q"], payload["scale"], bits=bits, n=n_padded,
+        q, payload["scale"], bits=bits, n=n_padded,
         out_dtype=dtype, interpret=interpret,
     )
     return jnp.reshape(x[:n], shape)

@@ -1,7 +1,43 @@
 """Pure-jnp oracle for the quantize kernels (bit-identical semantics)."""
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
+
+from repro.kernels import prng
+
+
+def quantize_plane_ref(seed, sids, rids, x, *, bits=8):
+    """Oracle for the fused plane quantizer: identical counter-PRNG
+    kappa derivation, materialized in plain jnp."""
+    lead, n = x.shape[:-1], x.shape[-1]
+    levels = float(2 ** (bits - 1) - 1)
+    sids = jnp.broadcast_to(
+        jnp.uint32(0) if sids is None else sids, lead
+    ).reshape(-1)
+    rids = jnp.broadcast_to(
+        prng.BROADCAST if rids is None else rids, lead
+    ).reshape(-1)
+    xf = x.reshape(-1, n).astype(jnp.float32)
+    scale = jnp.maximum(
+        jnp.max(jnp.abs(xf), axis=-1), jnp.finfo(jnp.float32).tiny
+    )
+
+    def one(s, r, row, sc):
+        es = prng.fold(seed, s, r)
+        kappa = prng.uniform01(
+            prng.random_bits(es, jnp.arange(n, dtype=jnp.uint32))
+        )
+        q = jnp.sign(row) * jnp.floor(levels * jnp.abs(row) / sc + kappa)
+        if bits == 8:
+            return q.astype(jnp.int8)
+        qi = q.astype(jnp.int32) + 8
+        if n % 2:
+            qi = jnp.concatenate([qi, jnp.full((1,), 8, jnp.int32)])
+        return ((qi[0::2] << 4) | qi[1::2]).astype(jnp.uint8)
+
+    q = jax.vmap(one)(sids, rids, xf, scale)
+    return q.reshape(lead + q.shape[-1:]), scale.reshape(lead)
 
 
 def quantize_ref(x_flat, rnd_bits, scale, *, bits=8):

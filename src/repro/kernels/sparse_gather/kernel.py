@@ -129,6 +129,125 @@ def cyclic_gather(x2, off, *, k, interpret=None):
     )(off, x2)[:k]
 
 
+# ---------------------------------------------------------------------------
+# Fused RandK plane compress/decompress: in-kernel counter-PRNG indices
+# ---------------------------------------------------------------------------
+#
+# The seeded wire format's whole point is that RandK indices never travel;
+# these kernels complete the picture by never materializing them in HBM
+# either.  Each grid tile derives its own slice of the affine index set
+# (off + j * stride) % n from the counter PRNG (repro.kernels.prng) with
+# the per-message seed folded in-kernel from (round seed, sender,
+# receiver) — sender and receiver run the SAME derivation, so only the
+# round seed needs to be synchronized, exactly as in the jnp path.
+
+
+def _affine_tile(seed_ref, sid_ref, rid_ref, *, n, tile, strides):
+    """This tile's slice of the seeded affine index set, in-register."""
+    from repro.kernels import prng
+
+    es = prng.fold((seed_ref[0], seed_ref[1]), sid_ref[0], rid_ref[0])
+    off = prng.derive_offset(es, n)
+    # scalar select chain over the static table (a jnp table would be a
+    # captured const array — disallowed in kernels, and pointless HBM)
+    slot = prng.derive_stride_slot(es, len(strides))
+    stride = jnp.int32(strides[0])
+    for t, s in enumerate(strides[1:], start=1):
+        stride = jnp.where(slot == t, jnp.int32(s), stride)
+    i = pl.program_id(1)
+    j = jax.lax.broadcasted_iota(jnp.int32, (1, tile), 1) + i * tile
+    return j, (off + j * stride) % n
+
+
+def _randk_gather_plane_kernel(seed_ref, sid_ref, rid_ref, x_ref, out_ref,
+                               *, n, strides):
+    _, idx = _affine_tile(
+        seed_ref, sid_ref, rid_ref, n=n, tile=BLOCK, strides=strides
+    )
+    out_ref[...] = x_ref[...][0, idx[0]][None, :]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n", "k", "strides", "interpret")
+)
+def randk_gather_plane(seed, sids, rids, x, *, n, k, strides,
+                       interpret=None):
+    """Fused RandK compress of a whole message plane: ONE pallas launch.
+
+    ``x [M, n_pad]`` holds M messages (the slot-batched ``[A, S, N]``
+    plane flattened to rows, zero-padded to a BLOCK multiple — indices
+    are taken mod the TRUE n, so padding is never sampled); returns
+    ``[M, k_pad]`` with the seeded affine index set of each message
+    gathered out.  ``strides`` is the static coprime table (``(1,)`` for
+    the block sampler); ``k``/``n``/``strides`` are compile-time, the
+    only runtime inputs are the seed pair, the id vectors and the plane.
+    """
+    interpret = resolve_interpret(interpret)
+    m, n_pad = x.shape
+    assert n <= n_pad, (n, n_pad)
+    k_pad = -(-k // BLOCK) * BLOCK
+    return pl.pallas_call(
+        functools.partial(
+            _randk_gather_plane_kernel, n=n, strides=strides
+        ),
+        grid=(m, k_pad // BLOCK),
+        in_specs=[
+            pl.BlockSpec((2,), lambda m_, i: (0,)),
+            pl.BlockSpec((1,), lambda m_, i: (m_,)),
+            pl.BlockSpec((1,), lambda m_, i: (m_,)),
+            pl.BlockSpec((1, n_pad), lambda m_, i: (m_, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, BLOCK), lambda m_, i: (m_, i)),
+        out_shape=jax.ShapeDtypeStruct((m, k_pad), x.dtype),
+        interpret=interpret,
+    )(jnp.stack(seed), sids, rids, x)
+
+
+def _randk_scatter_plane_kernel(seed_ref, sid_ref, rid_ref, v_ref, out_ref,
+                                *, n, n_pad, k, gain, strides):
+    j, idx = _affine_tile(
+        seed_ref, sid_ref, rid_ref, n=n, tile=v_ref.shape[1],
+        strides=strides,
+    )
+    # pad lanes (j >= k) aim past the plane and are dropped
+    idx = jnp.where(j < k, idx, n_pad)
+    vals = (gain * v_ref[...].astype(jnp.float32)).astype(out_ref.dtype)
+    zeros = jnp.zeros((n_pad,), out_ref.dtype)
+    out_ref[...] = zeros.at[idx[0]].set(vals[0], mode="drop")[None, :]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n", "k", "gain", "strides", "interpret")
+)
+def randk_scatter_plane(seed, sids, rids, v, *, n, k, gain, strides,
+                        interpret=None):
+    """Fused RandK decompress: re-derive each message's index set
+    in-kernel and scatter ``gain * v`` into an ``[M, n_pad]`` zero plane
+    (one grid step per message; the wrapper slices off the padding).
+    ``v [M, k_pad]`` may be k-padded — pad lanes are dropped, not
+    scattered.
+    """
+    interpret = resolve_interpret(interpret)
+    m, k_pad = v.shape
+    n_pad = -(-n // BLOCK) * BLOCK
+    return pl.pallas_call(
+        functools.partial(
+            _randk_scatter_plane_kernel, n=n, n_pad=n_pad, k=k,
+            gain=float(gain), strides=strides,
+        ),
+        grid=(m, 1),
+        in_specs=[
+            pl.BlockSpec((2,), lambda m_, i: (0,)),
+            pl.BlockSpec((1,), lambda m_, i: (m_,)),
+            pl.BlockSpec((1,), lambda m_, i: (m_,)),
+            pl.BlockSpec((1, k_pad), lambda m_, i: (m_, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, n_pad), lambda m_, i: (m_, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n_pad), v.dtype),
+        interpret=interpret,
+    )(jnp.stack(seed), sids, rids, v)
+
+
 def _cyclic_scatter_kernel(off_ref, vp_ref, out_ref, *, base):
     i = pl.program_id(0)
     out_ref[...] = vp_ref[pl.ds(i * BLOCK - off_ref[0] + base, BLOCK)]

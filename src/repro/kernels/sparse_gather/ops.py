@@ -15,6 +15,8 @@ from repro.kernels.sparse_gather.kernel import (
     cyclic_gather as _cyclic_gather_kernel,
     cyclic_scatter as _cyclic_scatter_kernel,
     gather as _gather_kernel,
+    randk_gather_plane as _randk_gather_plane_kernel,
+    randk_scatter_plane as _randk_scatter_plane_kernel,
     scatter as _scatter_kernel,
 )
 
@@ -42,6 +44,69 @@ def sparse_scatter(values, idx, n, gain=1.0, *, interpret=None):
     return _scatter_kernel(
         values, idx.astype(jnp.int32), gain, n=n, interpret=interpret
     )
+
+
+def _plane_ids(ids, lead, fill):
+    m = 1
+    for d in lead:
+        m *= d
+    if ids is None:
+        return jnp.full((max(m, 1),), fill, jnp.uint32)
+    return jnp.broadcast_to(ids, lead).reshape(-1).astype(jnp.uint32)
+
+
+def randk_gather_plane(seed, sids, rids, x, *, k, strides, interpret=None):
+    """Fused RandK compress of a batch of messages ``x [..., n]`` — one
+    Pallas launch for the whole plane, indices derived in-kernel from
+    ``(seed, sender, receiver)`` (``rids=None`` marks one-to-all
+    broadcast messages).  Returns ``[..., k]``."""
+    from repro.kernels import prng
+
+    lead, n = x.shape[:-1], x.shape[-1]
+    n_pad = -(-n // BLOCK) * BLOCK
+    xf = x.reshape(-1, n)
+    if n_pad != n:
+        xf = jnp.concatenate(
+            [xf, jnp.zeros((xf.shape[0], n_pad - n), xf.dtype)], axis=-1
+        )
+    out = _randk_gather_plane_kernel(
+        seed,
+        _plane_ids(sids, lead, 0),
+        _plane_ids(rids, lead, prng.BROADCAST),
+        xf,
+        n=n,
+        k=k,
+        strides=strides,
+        interpret=interpret,
+    )
+    return out[:, :k].reshape(lead + (k,))
+
+
+def randk_scatter_plane(seed, sids, rids, v, *, n, gain, strides,
+                        interpret=None):
+    """Fused RandK decompress of ``v [..., k]`` back onto zero planes
+    ``[..., n]`` — index sets re-derived in-kernel, never in HBM."""
+    from repro.kernels import prng
+
+    lead, k = v.shape[:-1], v.shape[-1]
+    k_pad = -(-k // BLOCK) * BLOCK
+    vf = v.reshape(-1, k)
+    if k_pad != k:
+        vf = jnp.concatenate(
+            [vf, jnp.zeros((vf.shape[0], k_pad - k), vf.dtype)], axis=-1
+        )
+    out = _randk_scatter_plane_kernel(
+        seed,
+        _plane_ids(sids, lead, 0),
+        _plane_ids(rids, lead, prng.BROADCAST),
+        vf,
+        n=n,
+        k=k,
+        gain=gain,
+        strides=strides,
+        interpret=interpret,
+    )
+    return out[:, :n].reshape(lead + (n,))
 
 
 def cyclic_gather(x, off, k, *, interpret=None):

@@ -1,7 +1,46 @@
 """Pure-jnp oracles for the sparse gather/scatter kernels."""
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
+
+from repro.kernels import prng
+
+
+def _plane_map(fn, sids, rids, planes):
+    lead = planes.shape[:-1]
+    sids = jnp.broadcast_to(
+        jnp.uint32(0) if sids is None else sids, lead
+    ).reshape(-1)
+    rids = jnp.broadcast_to(
+        prng.BROADCAST if rids is None else rids, lead
+    ).reshape(-1)
+    out = jax.vmap(fn)(sids, rids, planes.reshape((-1,) + planes.shape[-1:]))
+    return out.reshape(lead + out.shape[-1:])
+
+
+def randk_gather_plane_ref(seed, sids, rids, x, *, k, strides):
+    """Oracle for the fused plane gather: the exact same counter-PRNG
+    derivation, but with the index set materialized in plain jnp."""
+    n = x.shape[-1]
+
+    def one(s, r, row):
+        idx = prng.affine_indices(prng.fold(seed, s, r), n, k, strides)
+        return jnp.take(row, idx, axis=0)
+
+    return _plane_map(one, sids, rids, x)
+
+
+def randk_scatter_plane_ref(seed, sids, rids, v, *, n, gain, strides):
+    k = v.shape[-1]
+
+    def one(s, r, vals):
+        idx = prng.affine_indices(prng.fold(seed, s, r), n, k, strides)
+        g = jnp.asarray(gain, jnp.float32)
+        gv = (g * vals.astype(jnp.float32)).astype(vals.dtype)
+        return jnp.zeros((n,), vals.dtype).at[idx].set(gv)
+
+    return _plane_map(one, sids, rids, v)
 
 
 def sparse_gather_ref(x, idx):

@@ -44,6 +44,7 @@ COMPRESSORS = {
     "q4": C.BBitQuantizer(bits=4),
     "randk_uniform": C.RandK(fraction=0.5, sampler="uniform"),
     "randk_block": C.RandK(fraction=0.5, sampler="block"),
+    "randk_stride": C.RandK(fraction=0.5, sampler="stride"),
     "identity": C.Identity(),
 }
 
@@ -59,7 +60,9 @@ def test_zero_maps_to_zero(name):
         assert (rec == 0).all()
 
 
-@pytest.mark.parametrize("name", ["q8", "q4", "randk_uniform", "randk_block"])
+@pytest.mark.parametrize(
+    "name", ["q8", "q4", "randk_uniform", "randk_block", "randk_stride"]
+)
 def test_unbiasedness(name):
     """E[C(x)] = x within 5 sigma of the Monte-Carlo error."""
     comp = COMPRESSORS[name]
@@ -79,7 +82,9 @@ def test_unbiasedness(name):
     assert float(jnp.max(viol)) < 0.0, float(jnp.max(viol))
 
 
-@pytest.mark.parametrize("name", ["q8", "randk_uniform", "randk_block"])
+@pytest.mark.parametrize(
+    "name", ["q8", "randk_uniform", "randk_block", "randk_stride"]
+)
 def test_variance_bound(name):
     """E||C(x) - x||^2 <= (p - 1) ||x||^2 with p = comp.variance_p."""
     comp = COMPRESSORS[name]
@@ -176,36 +181,105 @@ def test_topk_selects_largest():
 
 
 # ---------------------------------------------------------------------------
-# Pallas-kernel-backed compressors (kernel=true in the spec)
+# impl={auto,jnp,pallas} backend selection + the legacy kernel= shim
 # ---------------------------------------------------------------------------
 
 
-def test_kernel_flag_spec_parsing():
-    assert C.get_compressor("qbit:bits=8,kernel=true") == C.BBitQuantizer(
-        bits=8, kernel=True
-    )
-    assert C.get_compressor("randk:fraction=0.5,kernel=true") == C.RandK(
-        fraction=0.5, kernel=True
+def test_impl_spec_parsing():
+    assert C.get_compressor("qbit:bits=8,impl=pallas") == C.BBitQuantizer(
+        bits=8, impl="pallas"
     )
     assert C.get_compressor("qbit:bits=4") == C.BBitQuantizer(bits=4)
-    assert C.get_compressor("qbit").kernel is False  # jnp path by default
+    assert C.get_compressor("qbit").impl == "auto"
+    # auto resolves through the kernels' central backend switch: jnp
+    # everywhere interpret mode would be used (i.e. everywhere but TPU)
+    expected = "jnp" if jax.default_backend() != "tpu" else "pallas"
+    assert C.resolve_impl("auto") == expected
+    assert C.resolve_impl("jnp") == "jnp"
+    assert C.resolve_impl("pallas") == "pallas"
+    with pytest.raises(ValueError, match="impl"):
+        C.get_compressor("qbit:impl=cuda")
+
+
+def test_kernel_shim_maps_to_impl_with_deprecation():
+    """kernel=true/false still parses, warns, and lands on the same
+    compressor as the new impl= spelling."""
+    cases = [
+        ("qbit:bits=8,kernel=true", "qbit:bits=8,impl=pallas"),
+        ("qbit:bits=8,kernel=false", "qbit:bits=8,impl=jnp"),
+        ("randk:fraction=0.5,kernel=true", "randk:fraction=0.5,impl=pallas"),
+        ("identity:kernel=true", "identity:impl=pallas"),
+        ("topk:fraction=0.5,kernel=false", "topk:fraction=0.5,impl=jnp"),
+    ]
+    for old, new in cases:
+        with pytest.warns(DeprecationWarning, match="impl"):
+            shimmed = C.get_compressor(old)
+        assert shimmed == C.get_compressor(new), (old, new)
+    # the new spelling never warns
+    import warnings
+
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        C.get_compressor("qbit:bits=8,impl=pallas")
+
+
+def test_unknown_params_raise_naming_valid_ones():
+    with pytest.raises(ValueError, match=r"bit.*valid params.*bits"):
+        C.get_compressor("qbit:bit=4")
+    with pytest.raises(ValueError, match=r"frac.*valid params.*fraction"):
+        C.get_compressor("randk:frac=0.1")
+    # Identity's allowlist is impl only — anything else is a spec error
+    with pytest.raises(ValueError, match="identity"):
+        C.get_compressor("identity:bits=8")
+    assert C.get_compressor("identity:impl=jnp") == C.Identity(impl="jnp")
+
+
+def test_compressor_protocol_and_registry():
+    for name, entry in C.COMPRESSORS.items():
+        comp = C.get_compressor(name)
+        assert isinstance(comp, C.Compressor)
+        assert comp.name == name == entry.name
+        assert "impl" in entry.params
+        assert "name" not in entry.params and "unbiased" not in entry.params
+
+
+def test_payload_is_typed_pytree_with_wire_bytes():
+    key = jax.random.key(0)
+    x = jax.random.normal(jax.random.key(1), (100,))
+    for spec in ("qbit:bits=8", "qbit:bits=4", "randk:fraction=0.25",
+                 "topk:fraction=0.25", "identity"):
+        comp = C.get_compressor(spec)
+        p = comp.compress(key, x)
+        assert isinstance(p, C.Payload)
+        # payload-derived bytes == the compressor's accounting formula
+        assert p.wire_bytes == comp.wire_bytes(x.shape, x.dtype), spec
+        # pytree roundtrip preserves type and leaves
+        leaves, treedef = jax.tree.flatten(p)
+        p2 = jax.tree.unflatten(treedef, leaves)
+        assert isinstance(p2, C.Payload) and list(p2) == list(p)
+
+
+# ---------------------------------------------------------------------------
+# Pallas-kernel-backed compressors (impl=pallas in the spec)
+# ---------------------------------------------------------------------------
 
 
 @pytest.mark.parametrize(
     "comp",
     [
-        C.RandK(fraction=0.5, sampler="block", kernel=True),
-        C.RandK(fraction=0.5, sampler="uniform", kernel=True),
-        C.TopK(fraction=0.5, kernel=True),
+        C.RandK(fraction=0.5, sampler="block", impl="pallas"),
+        C.RandK(fraction=0.5, sampler="uniform", impl="pallas"),
+        C.RandK(fraction=0.5, sampler="stride", impl="pallas"),
+        C.TopK(fraction=0.5, impl="pallas"),
     ],
-    ids=["randk_block", "randk_uniform", "topk"],
+    ids=["randk_block", "randk_uniform", "randk_stride", "topk"],
 )
 def test_sparse_kernel_path_bit_identical(comp):
-    """RandK/TopK keep their index derivation when kernel=True, so the
-    fused Pallas gather/scatter path is bit-identical to the jnp path."""
+    """RandK/TopK keep their index derivation when impl=pallas, so the
+    fused Pallas gather/scatter leaf path is bit-identical to jnp."""
     import dataclasses
 
-    jnp_comp = dataclasses.replace(comp, kernel=False)
+    jnp_comp = dataclasses.replace(comp, impl="jnp")
     for seed in range(4):
         key = jax.random.key(seed)
         x = jax.random.normal(jax.random.fold_in(key, 1), (333,))
@@ -223,7 +297,7 @@ def test_quantizer_kernel_path_unbiased_and_bounded():
     """The kernel quantizer draws its stochastic-rounding stream from raw
     uint32 bits (not jax.random.uniform), so it is NOT bit-identical to
     the jnp path — but it must stay unbiased and one-level bounded."""
-    comp = C.BBitQuantizer(bits=8, kernel=True)
+    comp = C.BBitQuantizer(bits=8, impl="pallas")
     x = jax.random.normal(jax.random.key(1), (512,))
     scale = float(jnp.max(jnp.abs(x)))
 
@@ -239,10 +313,7 @@ def test_quantizer_kernel_path_unbiased_and_bounded():
     assert err < 5 * scale / comp.levels / np.sqrt(300), err
 
 
-def test_kernel_compressors_run_inside_solver_step():
-    """End-to-end: a packed LT-ADMM round with kernel-backed compression
-    (the fused path the tentpole wires in) stays finite and close to the
-    jnp-path round."""
+def _packed_ltadmm_rounds(comp, rounds=3):
     import repro.core.admm as admm
     import repro.core.vr as vr
     from repro.core.topology import Exchange, Ring
@@ -254,17 +325,37 @@ def test_kernel_compressors_run_inside_solver_step():
     topo = Ring(prob.n_agents)
     ex = Exchange(topo)
     x0 = jnp.zeros((prob.n_agents, prob.n))
-    outs = {}
-    for kernel in (False, True):
-        comp = C.RandK(fraction=0.6, sampler="block", kernel=kernel)
-        cfg = admm.LTADMMConfig(eta=0.5, compressor_x=comp,
-                                compressor_z=comp)
-        st = admm.init(cfg, topo, ex, x0)
-        step = jax.jit(
-            lambda s, k, cfg=cfg: admm.step(cfg, topo, ex, saga, s, data, k)
-        )
-        for i in range(3):
-            st = step(st, jax.random.key(i))
-        outs[kernel] = np.asarray(st.x)
-    # RandK kernel path is bit-identical => identical trajectories
-    np.testing.assert_allclose(outs[True], outs[False], atol=1e-7)
+    cfg = admm.LTADMMConfig(eta=0.5, compressor_x=comp, compressor_z=comp)
+    st = admm.init(cfg, topo, ex, x0)
+    step = jax.jit(
+        lambda s, k: admm.step(cfg, topo, ex, saga, s, data, k)
+    )
+    for i in range(rounds):
+        st = step(st, jax.random.key(i))
+    return np.asarray(st.x)
+
+
+def test_kernel_compressors_run_inside_solver_step():
+    """End-to-end: packed LT-ADMM rounds with Pallas-backed compression.
+    The uniform sampler is NOT plane-capable, so impl=pallas takes the
+    vmapped leaf-kernel path — bit-identical to jnp trajectories."""
+    x_jnp = _packed_ltadmm_rounds(C.RandK(fraction=0.6, sampler="uniform",
+                                          impl="jnp"))
+    x_ker = _packed_ltadmm_rounds(C.RandK(fraction=0.6, sampler="uniform",
+                                          impl="pallas"))
+    np.testing.assert_allclose(x_ker, x_jnp, atol=1e-7)
+
+
+def test_fused_plane_compressors_run_inside_solver_step():
+    """The fused plane path (impl=pallas + block/stride RandK or qbit):
+    ONE Pallas launch per message class with in-kernel counter-PRNG.
+    Its random stream differs from the jnp path by design, so the check
+    is finiteness + consensus progress, not bitwise equality."""
+    for comp in (
+        C.RandK(fraction=0.6, sampler="stride", impl="pallas"),
+        C.RandK(fraction=0.6, sampler="block", impl="pallas"),
+        C.BBitQuantizer(bits=8, impl="pallas"),
+    ):
+        x = _packed_ltadmm_rounds(comp, rounds=3)
+        assert np.isfinite(x).all(), comp
+        assert np.abs(x).max() > 0, comp  # the round actually moved

@@ -161,7 +161,7 @@ def test_compressor_spec_strings():
         compression.BBitQuantizer(bits=4)
     with pytest.raises(ValueError, match="unknown compressor"):
         compression.get_compressor("gzip")
-    with pytest.raises(ValueError, match="bad params"):
+    with pytest.raises(ValueError, match=r"unknown param\(s\).*bitz"):
         compression.get_compressor("qbit:bitz=4")
     with pytest.raises(ValueError, match="malformed"):
         compression.get_compressor("qbit:8bits")
