@@ -1,0 +1,161 @@
+"""Personalization sweep: consensus vs learned-graph personalized models.
+
+On the planted-cluster logistic problem (``problems.clusters``: 16
+agents, 4 clusters with orthogonal ground-truth separators) this sweeps
+the cluster SEPARATION and compares, at each level:
+
+* ``ltadmm:`` exact consensus — one compromise model for all clusters;
+* ``dada:`` — per-agent personalized models plus a LEARNED sparse
+  collaboration graph (``core.graphlearn``).
+
+Reported per row: mean per-agent test loss of both, and the learned
+graph's edge precision/recall against the planted intra-cluster edge
+set.  At separation 0 the tasks are identical and consensus is optimal
+(personalization can only tie); as separation grows the consensus model
+is increasingly wrong while dada tracks each cluster's optimum AND its
+learned edges concentrate on the planted clusters.
+
+    PYTHONPATH=src python -m benchmarks.personalization_sweep
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import vr
+from repro.core.graphlearn import edge_precision_recall
+from repro.core.schedule import build_graph
+from repro.core.solver import make_solver
+from repro.problems.clusters import ClusteredLogisticProblem
+
+DADA_SPEC = ("dada:lr=0.05,mu=0.5,lambda_g=0.05,graph_every=5,"
+             "degree_cap=3,batch_size=8")
+LTADMM_SPEC = "ltadmm:tau=5"
+SEPARATIONS = (0.0, 1.0, 3.0)
+ROUNDS = 300
+
+
+def _run(prob, spec, train, rounds, seed):
+    """Build+run one registry spec on the candidate complete graph;
+    returns (solver, final state)."""
+    graph, ex = build_graph("complete", prob.n_agents)
+    est = (vr.SagaTable(sample_grad=prob.sample_grad, m=prob.m)
+           if spec.startswith("ltadmm")
+           else vr.PlainSgd(batch_grad=prob.batch_grad))
+    solver = make_solver(spec, graph, ex, est)
+    st = solver.init(jnp.zeros((prob.n_agents, prob.n), jnp.float32))
+    base = jax.random.key(seed)
+
+    def body(st, i):
+        return solver.step(st, train, jax.random.fold_in(base, i)), None
+
+    st, _ = jax.jit(
+        lambda st: jax.lax.scan(body, st, jnp.arange(rounds))
+    )(st)
+    return solver, st
+
+
+def compare_at(separation, rounds=ROUNDS, seed=0):
+    """One sweep point: returns a dict with consensus/personalized mean
+    test losses and learned-graph precision/recall."""
+    prob = ClusteredLogisticProblem(separation=separation)
+    train, test = prob.make_split(jax.random.key(seed))
+
+    ref, st_ref = _run(prob, LTADMM_SPEC, train, rounds, seed + 1)
+    x_ref = ref.consensus_params(st_ref)
+    consensus = prob.mean_test_loss(jnp.mean(x_ref, axis=0), test)
+
+    dada, st_d = _run(prob, DADA_SPEC, train, rounds, seed + 1)
+    personal = prob.mean_test_loss(dada.consensus_params(st_d), test)
+    precision, recall = edge_precision_recall(
+        dada.learned_weights(st_d), prob.intra_cluster_edges()
+    )
+    return {
+        "separation": separation,
+        "consensus_test_loss": float(consensus),
+        "dada_test_loss": float(personal),
+        "edge_precision": float(precision),
+        "edge_recall": float(recall),
+    }
+
+
+def run(print_rows=True, separations=SEPARATIONS, rounds=ROUNDS):
+    """Rows ``(name, consensus_loss, dada_loss, precision, recall)`` —
+    the full-CSV harness consumes these; ``compare_at`` is the single
+    point the examples reuse."""
+    rows = []
+    for sep in separations:
+        r = compare_at(sep, rounds=rounds)
+        rows.append((f"personalization/sep={sep:g}",
+                     r["consensus_test_loss"], r["dada_test_loss"],
+                     r["edge_precision"], r["edge_recall"]))
+    if print_rows:
+        print(f"{'sweep point':26s} {'consensus':>10s} {'dada':>10s} "
+              f"{'edge P':>7s} {'edge R':>7s}")
+        for name, cons, dd, p, rc in rows:
+            print(f"{name:26s} {cons:10.4f} {dd:10.4f} {p:7.2f} {rc:7.2f}")
+    return rows
+
+
+def perf_row(rounds=400, tol=2e-3, seed=0):
+    """Fixed-seed dada perf-smoke row (same schema as the ltadmm rows in
+    ``benchmarks.run.perf_smoke``).  The convergence metric is the
+    PERSONALIZED stationarity measure ``graphlearn.
+    personalized_grad_norm_sq`` — the consensus gradient norm is the
+    wrong yardstick for a solver that deliberately does not reach
+    consensus."""
+    import time
+
+    from repro.core.graphlearn import personalized_grad_norm_sq
+
+    prob = ClusteredLogisticProblem()
+    train, _ = prob.make_split(jax.random.key(seed))
+    graph, ex = build_graph("complete", prob.n_agents)
+    solver = make_solver(DADA_SPEC, graph, ex,
+                         vr.PlainSgd(batch_grad=prob.batch_grad))
+    base = jax.random.key(seed + 1)
+    me = 10
+
+    def body(st, i):
+        return solver.step(st, train, jax.random.fold_in(base, i)), None
+
+    def chunk(st, c):
+        st, _ = jax.lax.scan(body, st, c * me + jnp.arange(me))
+        return st, personalized_grad_norm_sq(
+            solver, st, prob.full_grad, train
+        )
+
+    runner = jax.jit(lambda st: jax.lax.scan(
+        chunk, st, jnp.arange(rounds // me)
+    ))
+
+    def once():
+        st = solver.init(jnp.zeros((prob.n_agents, prob.n), jnp.float32))
+        t0 = time.perf_counter()
+        st, gns = runner(st)
+        jax.block_until_ready(gns)
+        return time.perf_counter() - t0, gns
+
+    cold_s, _ = once()
+    warm_s, gns = once()
+    g = np.asarray(gns)
+    idx = (np.arange(rounds // me) + 1) * me
+    hit = np.nonzero(g <= tol)[0]
+    return {
+        "name": "dada/complete16/learned-graph",
+        "spec": DADA_SPEC,
+        "rounds": rounds,
+        "cold_wall_s": round(cold_s, 3),
+        "warm_wall_s": round(warm_s, 3),
+        "rounds_to_tol": int(idx[hit[0]]) if hit.size else None,
+        "tol": tol,
+        "final_gradnorm_sq": float(g[-1]),
+        "wire_bytes_per_round": solver.wire_bytes(
+            np.zeros((prob.n,), np.float32)
+        ),
+    }
+
+
+if __name__ == "__main__":
+    run()

@@ -80,6 +80,13 @@ def perf_smoke(out_path: str) -> None:
                 {"x": np.zeros((prob.n,), np.float32)}
             ),
         })
+    # learned-graph lane: the dada solver converges in a different
+    # metric (personalized stationarity, not consensus gradient norm) —
+    # its row rides the same schema so the regression gate covers the
+    # graphlearn subsystem too
+    from benchmarks import personalization_sweep
+
+    results.append(personalization_sweep.perf_row())
     kernel_rows = kernels_bench.run(print_rows=False, fast=True)
     payload = {
         "schema": 1,
@@ -102,7 +109,8 @@ def perf_smoke(out_path: str) -> None:
 
 def full_csv() -> None:
     from benchmarks import kernels_bench, paper_fig1, paper_fig2, paper_table1
-    from benchmarks import roofline, schedule_sweep, topology_sweep
+    from benchmarks import (personalization_sweep, roofline, schedule_sweep,
+                            topology_sweep)
 
     t0 = time.time()
     print("name,us_per_call,derived")
@@ -118,6 +126,10 @@ def full_csv() -> None:
               f";wire_bytes_per_round={wire};t_per_round={t_round:.1f}")
     for name, val in paper_table1.run(print_rows=False):
         print(f"{name},,cost={val}")
+    for name, cons, dd, p, r in personalization_sweep.run(print_rows=False):
+        print(f"{name},,consensus_test_loss={cons:.4f}"
+              f";dada_test_loss={dd:.4f}"
+              f";edge_precision={p:.2f};edge_recall={r:.2f}")
     for name, us, derived in kernels_bench.run(print_rows=False):
         print(f"{name},{us:.0f},{derived}")
     for name, t_comp, dom in roofline.run(print_rows=False):

@@ -17,6 +17,16 @@ solver itself is a registry spec string too — swap in a baseline with
         --topology-schedule drop:p=0.3,base=complete # i.i.d. link failures
     PYTHONPATH=src python examples/quickstart.py \
         --solver choco:lr=0.1                        # noise-ball baseline
+    PYTHONPATH=src python examples/quickstart.py \
+        --solver dada:                               # learned graph
+
+A ``dada:`` spec flips the run into PERSONALIZED mode: the problem
+becomes the planted-cluster task (``problems.clusters``, 16 agents /
+4 clusters with distinct optima), each agent keeps its own model, and
+the reported metrics are mean per-agent test loss plus how well the
+LEARNED collaboration graph recovers the planted clusters — consensus
+metrics are meaningless for a solver that deliberately never reaches
+consensus.
 """
 import argparse
 
@@ -29,16 +39,53 @@ from repro.core.solver import consensus_error, make_solver, solver_entry
 from repro.problems.logistic import LogisticProblem
 
 
+def run_personalized(args):
+    """``--solver dada:...``: planted clusters, learned graph."""
+    from repro.core.graphlearn import edge_precision_recall
+    from repro.problems.clusters import ClusteredLogisticProblem
+
+    prob = ClusteredLogisticProblem()
+    train, test = prob.make_split(jax.random.key(0))
+    graph, ex = build_graph(args.topology_schedule or args.topology,
+                            prob.n_agents)
+    solver = make_solver(args.solver, graph, ex,
+                         vr.PlainSgd(batch_grad=prob.batch_grad),
+                         defaults={"lr": 0.05, "mu": 0.5,
+                                   "lambda_g": 0.05, "graph_every": 5,
+                                   "degree_cap": 3, "batch_size": 8})
+    state = solver.init(jnp.zeros((prob.n_agents, prob.n)))
+    step = jax.jit(lambda s, k: solver.step(s, train, k))
+
+    print("round   mean per-agent test loss   edge precision/recall")
+    for r in range(301):
+        state = step(state, jax.random.key(r))
+        if r % 50 == 0:
+            x = solver.consensus_params(state)
+            p, rc = edge_precision_recall(
+                solver.learned_weights(state), prob.intra_cluster_edges()
+            )
+            print(f"{r:5d}   {prob.mean_test_loss(x, test):24.4f}   "
+                  f"{p:9.2f} /{rc:5.2f}")
+    print("\npersonalized models + a learned sparse graph: each agent "
+          "talks only to its (discovered) cluster, and beats the one-"
+          "model consensus compromise on its own test set.")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--solver", default="ltadmm:compressor=qbit:bits=8",
                     help="solver registry spec (ltadmm, dsgd, choco, "
-                         "lead, cold, cedas, dpdc; with :k=v,... params)")
+                         "lead, cold, cedas, dpdc, dada; with :k=v,... "
+                         "params)")
     ap.add_argument("--topology", default="ring")
     ap.add_argument("--topology-schedule", default=None,
                     help="time-varying graph spec (cycle:..., drop:..., "
                          "gossip:...); overrides --topology")
     args = ap.parse_args()
+    if solver_entry(args.solver).name == "dada":
+        if args.topology == "ring" and not args.topology_schedule:
+            args.topology = "complete"  # candidate graph, not comm graph
+        return run_personalized(args)
     prob = LogisticProblem()  # paper §III settings
     data = prob.make_data(jax.random.key(0))
     graph, ex = build_graph(args.topology_schedule or args.topology,

@@ -54,6 +54,20 @@ class CostModel:
                        getattr(topo, "participation", lambda: 1.0)()
                    ))
 
+    @classmethod
+    def for_learned_graph(cls, topo, degree_cap: int,
+                          t_g: float = 1.0, t_c: float = 10.0):
+        """Cost model for a solver that LEARNS its graph under a per-row
+        degree cap (``graphlearn.DadaSolver``): the candidate topology
+        only bounds the support — at most ``degree_cap`` edges per agent
+        ever carry a message, so communication charges
+        ``min(degree, degree_cap)`` per agent instead of the full
+        candidate degree.  A dense candidate graph with a small cap is
+        therefore nearly as cheap per round as a ring."""
+        base = cls.for_topology(topo, t_g=t_g, t_c=t_c)
+        capped = float(np.mean(np.minimum(topo.degrees(), degree_cap)))
+        return dataclasses.replace(base, mean_degree=capped)
+
     @property
     def t_comm(self) -> float:
         """Effective cost of one communication round on this graph

@@ -1,0 +1,408 @@
+"""Learned collaboration graphs: joint personalized-model + graph training.
+
+Every other solver in this repo consumes the agent graph as a static or
+scheduled *input*.  This module makes the graph a *learned object*, in
+the style of Dada (Zantedeschi, Bellet & Tommasi, AISTATS 2020): each
+agent trains a PERSONALIZED model ``x_i`` (no exact consensus) and
+jointly learns per-edge collaboration weights with controlled sparsity,
+so communication concentrates on the few peers whose tasks are similar.
+
+Objective (per-agent finite sums ``f_i``, coupling weights ``W``)::
+
+    min_{x, W}  sum_i f_i(x_i) + (mu / 2) sum_{ij} W_ij ||x_i - x_j||^2
+                + lambda_g * entropic regularizer on each weight row,
+    s.t. every weight row lies on the probability simplex with at most
+    ``degree_cap`` nonzeros inside the candidate graph.
+
+``DadaSolver`` alternates, behind the ordinary ``Solver`` protocol:
+
+* **K = graph_every model rounds** — a weighted personalized-consensus
+  gradient step: each agent descends its own loss plus the coupling pull
+  ``mu * sum_s c[i, s] (x_i - xhat_j)`` toward the (mirrored) models of
+  its LEARNED peers — replacing the uniform Metropolis mean of the
+  gossip baselines.
+* **one graph round** — a closed-form row update from pairwise model
+  distances ``d[i, s] = ||xhat_i - xhat_j||^2``: restrict each row to
+  its ``degree_cap`` nearest candidates, then put the entropic-simplex
+  minimizer ``w[i, s] oc exp(-mu d[i, s] / (2 lambda_g))`` on that
+  support (row simplex, exactly capped sparsity).  The rows are then
+  symmetrized INTO the coupling ``c`` by exchanging one scalar per edge
+  over the existing masked ``Exchange`` — no new comm primitive:
+  ``c[i, s] = (w_ij + w_ji) / 2`` where both endpoints selected the
+  edge, 0 otherwise (mutual-selection support keeps ``c`` symmetric AND
+  within the degree cap).
+
+The compiled union-slot SPMD program stays static: the exchange always
+runs over the full candidate slot set, and the learned sparsity only
+zeroes dead edges out of the math — while ``wire_bytes``/``round_cost``
+charge the *effective* degree ``min(degree, degree_cap)``, so dead
+edges stop being billed (see ``live_wire_bytes`` for the exact
+state-dependent figure).
+
+State (a dict, ``GossipSolverMixin`` conventions)::
+
+    x     [A, ...]   personalized params (packed: the [A, N] plane)
+    xhat  [A, ...]   compression mirrors (common knowledge; == x when
+                     the compressor is the identity)
+    w     [A, S]     learned row weights   — each row on the simplex
+    c     [A, S]     symmetric coupling    — mutual support, <= cap
+    k     []         round counter
+
+Spec: ``dada:lambda_g=0.1,mu=0.5,graph_every=5,degree_cap=3`` (plus
+``lr, batch_size, compressor, packed``) through ``make_solver``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.trees import tree_map, tree_sub, tree_zeros_like
+from repro.core import compression, packing
+from repro.core.baselines import (
+    GossipSolverMixin,
+    _compress_stacked,
+    _like,
+    _sample_grads,
+)
+from repro.core.schedule import TopologySchedule, union_topology
+from repro.core.topology import Exchange
+
+
+# ---------------------------------------------------------------------------
+# Closed-form graph update (pure, host-free — the unit the property tests
+# hit directly)
+# ---------------------------------------------------------------------------
+
+
+def row_simplex_weights(dist, cand_mask, mu, lambda_g, degree_cap):
+    """Closed-form sparsity-controlled row update from pairwise distances.
+
+    Minimizes ``(mu / 2) <w_i, d_i> + lambda_g <w_i, log w_i>`` over the
+    probability simplex restricted to the ``degree_cap`` nearest
+    candidates of each row: keep the ``degree_cap`` smallest distances
+    among ``cand_mask`` slots, and place the entropic minimizer
+    ``softmax(-mu d / (2 lambda_g))`` on that support.
+
+    ``dist``: [A, S] squared model distances; ``cand_mask``: [A, S] bool
+    candidate slots.  Returns ``(w, keep)``: ``w`` [A, S] with each row
+    summing to 1 over at most ``degree_cap`` nonzeros (rows with no
+    candidate are all-zero), ``keep`` the selected support mask.
+    """
+    A, S = dist.shape
+    neg = jnp.where(cand_mask, -dist, -jnp.inf)
+    k = min(int(degree_cap), S)
+    vals, idx = jax.lax.top_k(neg, k)  # top-k largest of -d = k nearest
+    keep = jnp.zeros((A, S), bool).at[
+        jnp.arange(A)[:, None], idx
+    ].max(vals > -jnp.inf)
+    logits = jnp.where(keep, -dist * (mu / (2.0 * lambda_g)), -jnp.inf)
+    # softmax over an all--inf row is nan; such rows carry no candidates
+    # and are zeroed below
+    w = jax.nn.softmax(logits, axis=1)
+    has = keep.any(axis=1, keepdims=True)
+    return jnp.where(has & keep, w, 0.0), keep
+
+
+def pairwise_dist_sq(xhat, xhat_nbr):
+    """[A, S] squared distances ``||xhat_i - xhat_j||^2`` from the
+    mirrored params and their slot-gathered neighbor view (trees with
+    leaves ``[A, ...]`` / ``[A, S, ...]``).  Computed mirror-to-mirror
+    so both endpoints of an edge derive the SAME value from what
+    actually traveled the wire — the symmetry the coupling relies on."""
+    def one(a, b):
+        diff = b - a[:, None]
+        return jnp.sum(
+            diff * diff, axis=tuple(range(2, diff.ndim))
+        )
+
+    return sum(jax.tree.leaves(jax.tree.map(one, xhat, xhat_nbr)))
+
+
+def _edge_scale(cw, leaf_nbr):
+    """Broadcast [A, S] edge weights over a [A, S, ...] leaf."""
+    return jnp.reshape(cw, cw.shape + (1,) * (leaf_nbr.ndim - 2))
+
+
+# ---------------------------------------------------------------------------
+# Dense views + graph-quality metrics (host-side, for tests/benchmarks)
+# ---------------------------------------------------------------------------
+
+
+def dense_weights(topo, edge_w) -> np.ndarray:
+    """[A, A] dense matrix from per-slot edge weights ``edge_w`` [A, S]
+    (``topo`` is the static candidate topology — pass the union for a
+    schedule).  Masked slots contribute nothing."""
+    w = np.asarray(edge_w)
+    nbr, mask = topo.neighbor_table(), topo.slot_mask()
+    A, S = w.shape
+    W = np.zeros((A, A), dtype=np.float64)
+    for s in range(S):
+        live = np.asarray(mask[:, s])
+        W[np.arange(A)[live], nbr[live, s]] = w[live, s]
+    return W
+
+
+def edge_precision_recall(W, true_edges, tol=0.0):
+    """Precision/recall of the learned support ``{(i, j): W_ij > tol}``
+    against a set of undirected ground-truth edges."""
+    A = W.shape[0]
+    pred = {
+        (i, j)
+        for i in range(A)
+        for j in range(i + 1, A)
+        if W[i, j] > tol or W[j, i] > tol
+    }
+    true = {(min(i, j), max(i, j)) for (i, j) in true_edges}
+    tp = len(pred & true)
+    precision = tp / len(pred) if pred else 1.0
+    recall = tp / len(true) if true else 1.0
+    return precision, recall
+
+
+def personalized_grad_norm_sq(solver, state, grad_fn, data):
+    """Mean per-agent squared norm of the PERSONALIZED objective's
+    gradient ``grad f_i(x_i) + mu sum_s c[i, s] (x_i - x_j)`` — the
+    stationarity measure of the joint objective at the current coupling
+    (the analogue of ``||grad F(xbar)||^2`` for consensus solvers).
+    ``grad_fn(x_i, data_i)`` is the full local gradient."""
+    x = solver.consensus_params(state)
+    g = jax.vmap(grad_fn)(x, data)
+    x_nbr = solver.exchange.gather_batched(x)
+    c = state["c"]
+    pull = tree_map(
+        lambda xl, nl: jnp.sum(_edge_scale(c, nl) * (xl[:, None] - nl),
+                               axis=1),
+        x, x_nbr,
+    )
+    total = tree_map(
+        lambda gl, pl: gl + solver.mu * pl, g, pull
+    )
+    sq = sum(
+        jnp.sum(leaf * leaf, axis=tuple(range(1, leaf.ndim)))
+        for leaf in jax.tree.leaves(total)
+    )
+    return jnp.mean(sq)
+
+
+# ---------------------------------------------------------------------------
+# The solver
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class DadaSolver(GossipSolverMixin):
+    """Jointly learned personalized models + sparse collaboration graph
+    (module docstring).  ``consensus_params`` returns the PER-AGENT
+    personalized params — there is deliberately no exact consensus."""
+
+    topo: Any  # Topology | TopologySchedule (candidate support = union)
+    exchange: Exchange = None
+    lr: float = 0.05
+    mu: float = 0.5
+    lambda_g: float = 0.1
+    graph_every: int = 5
+    degree_cap: int = 2
+    batch_size: int = 1
+    compressor: Any = None  # None = exact broadcast (identity wire)
+    grad_est: Any = None
+    packed: bool = True
+    name: str = "dada"
+
+    state_fields = ("x", "xhat", "w", "c")
+
+    def __post_init__(self):
+        assert self.exchange is not None, (
+            "dada needs the masked Exchange over its candidate graph "
+            "(make_solver passes it through)"
+        )
+        assert self.graph_every >= 1, self.graph_every
+        assert self.degree_cap >= 1, self.degree_cap
+        assert self.lambda_g > 0.0, self.lambda_g
+
+    # ---- candidate structure (host constants) -----------------------------
+
+    @property
+    def _union(self):
+        return union_topology(self.topo)
+
+    def _cand_mask(self) -> np.ndarray:  # [A, S] bool
+        return self._union.slot_mask()
+
+    # ---- init -------------------------------------------------------------
+
+    def _init(self, x0):
+        union = self._union
+        mask = self._cand_mask()
+        nbr = union.neighbor_table()
+        deg = np.maximum(mask.sum(axis=1), 1)
+        # uniform row simplex over the candidates; the initial coupling
+        # is its exact symmetrization c0[i, s] = (w0[i, s] + w0[j, rs])/2
+        # (replaced at round 0 — the first step IS a graph round, so the
+        # degree cap holds from the start)
+        w0 = np.where(mask, 1.0 / deg[:, None], 0.0)
+        rs = np.asarray(union.reverse_slot)
+        c0 = np.where(mask, 0.5 * (w0 + w0[nbr, rs[None, :]]), 0.0)
+        return {
+            "x": x0,
+            "xhat": tree_zeros_like(x0),
+            "w": jnp.asarray(w0, jnp.float32),
+            "c": jnp.asarray(c0, jnp.float32),
+        }
+
+    # ---- one round --------------------------------------------------------
+
+    def _step(self, state, data, key, k, est):
+        x, xhat, w, c = state["x"], state["xhat"], state["w"], state["c"]
+        g = _sample_grads(est, x, data, key, self.batch_size)
+
+        # broadcast: advance the shared mirrors by one compressed
+        # innovation, then read every candidate neighbor's mirror (ONE
+        # slot-batched exchange; the compiled program is static)
+        comp = self._wire_compressor()
+        q = _compress_stacked(
+            comp, jax.random.fold_in(key, 1), tree_sub(x, xhat), _like(x)
+        )
+        xhat = tree_map(jnp.add, xhat, q)
+        xhat_nbr = self.exchange.gather_batched(xhat)
+
+        # live candidate slots this round (schedules mask flapping links;
+        # a static topology is live everywhere on its own mask)
+        am = jnp.asarray(self._cand_mask())
+        if isinstance(self.topo, TopologySchedule):
+            am = am & self.topo.round_mask(k)
+
+        # ---- graph round: closed-form row update + symmetrization ----
+        dist = pairwise_dist_sq(xhat, xhat_nbr)
+        w_new, _ = row_simplex_weights(
+            dist, am, self.mu, self.lambda_g, self.degree_cap
+        )
+        # one scalar per edge over the SAME masked exchange: my slot-s
+        # weight for edge (i, j) meets j's reverse-slot weight for it
+        w_rev = self.exchange.exchange_batched(w_new)
+        mutual = (w_new > 0) & (w_rev > 0)
+        c_new = jnp.where(mutual, 0.5 * (w_new + w_rev), 0.0)
+        do_graph = jnp.equal(jnp.mod(k, self.graph_every), 0)
+        # a graph round renegotiates the WHOLE coupling row: dark
+        # candidate edges are suspended (zero) until a graph round sees
+        # them live again — darkness is edge-symmetric, so both
+        # endpoints suspend together (c stays symmetric) and the live
+        # support is at most degree_cap per row UNCONDITIONALLY, even
+        # under flapping schedules.  w rows with no live candidate hold
+        # their previous simplex row (w is row-local; no symmetry
+        # constraint to preserve).
+        row_ok = am.any(axis=1, keepdims=True)
+        w = jnp.where(do_graph & row_ok, w_new, w)
+        c = jnp.where(do_graph, c_new, c)
+
+        # ---- model round: personalized weighted-consensus step -------
+        cw = jnp.where(am, c, 0.0)  # dead/dark edges carry no pull
+        pull = tree_map(
+            lambda xl, nl: jnp.sum(
+                _edge_scale(cw, nl) * (xl[:, None] - nl), axis=1
+            ),
+            x, xhat_nbr,
+        )
+        x = tree_map(
+            lambda xl, gl, pl: xl - self.lr * (gl + self.mu * pl),
+            x, g, pull,
+        )
+        return {"x": x, "xhat": xhat, "w": w, "c": c}
+
+    # ---- learned-graph views ----------------------------------------------
+
+    def learned_weights(self, state) -> np.ndarray:
+        """[A, A] dense symmetric coupling from the current state."""
+        return dense_weights(self._union, state["c"])
+
+    def live_degrees(self, state) -> np.ndarray:
+        """[A] live (learned) degree per agent — support of ``c``."""
+        return (np.asarray(state["c"]) > 0).sum(axis=1)
+
+    # ---- accounting: dead edges are never charged --------------------------
+
+    def _deg_eff(self, t=None):
+        """Effective busiest-agent degree: the learned graph keeps at
+        most ``degree_cap`` live edges per agent (mutual selection), so
+        accounting clamps the candidate degree there — on a schedule the
+        round's (or period-mean) active degree is clamped the same way."""
+        topo = self.topo
+        if t is not None and hasattr(topo, "round_degrees"):
+            deg = topo.round_degrees(t)
+        else:
+            deg = topo.degrees()
+        return float(np.max(np.minimum(deg, self.degree_cap)))
+
+    # one f32 scalar per live edge travels in a graph round (the row
+    # weight being symmetrized); distances come free from the model
+    # round's own exchange
+    GRAPH_MSG_BYTES = 4
+
+    def wire_bytes(self, params, t: int | None = None) -> int:
+        """Busiest-agent TX bytes per round over LIVE edges only: the
+        (compressed) model message per live edge every round, plus the
+        4-byte weight scalar per live edge on graph rounds (``t=None``
+        amortizes it as ``1/graph_every`` per round).  The candidate
+        degree never appears — dead edges are not charged."""
+        if getattr(self, "packed", False):
+            params = packing.abstract_plane(packing.layout_of(params))
+        per_edge = compression.tree_wire_bytes(
+            self._wire_compressor(), params
+        )
+        if t is not None:
+            nb = self._deg_eff(t) * per_edge
+            if t % self.graph_every == 0:
+                nb += self._deg_eff(t) * self.GRAPH_MSG_BYTES
+            return int(round(nb))
+        return int(round(
+            self._deg_eff()
+            * (per_edge + self.GRAPH_MSG_BYTES / self.graph_every)
+        ))
+
+    def live_wire_bytes(self, state, params) -> int:
+        """Exact busiest-agent model-message bytes for the CURRENT
+        learned graph: only edges with ``c > 0`` carry a payload."""
+        if getattr(self, "packed", False):
+            params = packing.abstract_plane(packing.layout_of(params))
+        per_edge = compression.tree_wire_bytes(
+            self._wire_compressor(), params
+        )
+        return int(np.max(self.live_degrees(state))) * per_edge
+
+    def round_cost(self, cost_model, m: int) -> float:
+        """(t_g, t_c) cost of one round: one stochastic gradient step +
+        one communication round on the live graph, plus the amortized
+        graph-round exchange every ``graph_every`` rounds.  Pair with
+        ``CostModel.for_learned_graph`` so t_comm reflects the capped
+        degree."""
+        del m
+        return (cost_model.t_grad
+                + (1.0 + 1.0 / self.graph_every) * cost_model.t_comm)
+
+    # ---- sharding: w/c are edge-shaped ------------------------------------
+
+    def state_sharding(self, x_ps, edge_ps, scalar_ps):
+        return {"x": x_ps, "xhat": x_ps, "w": edge_ps, "c": edge_ps,
+                "k": scalar_ps}
+
+
+# ---------------------------------------------------------------------------
+# Registry factory (registered by core.solver to avoid an import cycle)
+# ---------------------------------------------------------------------------
+
+DADA_PARAMS = ("lr", "mu", "lambda_g", "graph_every", "degree_cap",
+               "batch_size", "compressor", "packed")
+
+
+def make_dada(graph, exchange, grad_est, **kw):
+    comp = kw.pop("compressor", None)
+    if isinstance(comp, str):
+        comp = compression.get_compressor(comp)
+    kw = {k: compression.coerce_param(v) for k, v in kw.items()}
+    return DadaSolver(
+        topo=graph, exchange=exchange, grad_est=grad_est,
+        compressor=comp, **kw,
+    )

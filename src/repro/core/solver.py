@@ -39,7 +39,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.common.trees import tree_consensus_error, tree_consensus_mean
-from repro.core import admm, baselines, compression, packing
+from repro.core import admm, baselines, compression, graphlearn, packing
 from repro.core.admm import LTADMMConfig
 from repro.core.schedule import TopologySchedule
 from repro.core.topology import Exchange
@@ -393,3 +393,18 @@ for _name, _cls in baselines.ALL_BASELINES.items():
         estimator="sgd",
         doc=_BASELINE_DOCS.get(_name, ""),
     )
+
+
+# ---- dada: learned collaboration graph ------------------------------------
+
+register_solver(
+    "dada",
+    graphlearn.make_dada,
+    params=graphlearn.DADA_PARAMS,
+    nested=("compressor",),
+    estimator="sgd",
+    doc="Dada: jointly learned personalized models + sparse "
+        "collaboration graph (alternating model/graph rounds; "
+        "lambda_g entropic weight, mu coupling, graph_every cadence, "
+        "degree_cap live-edge sparsity)",
+)

@@ -3,7 +3,8 @@
 Handles padding to the kernel BLOCK, the inf-norm scale pass, and the
 PRNG-bit stream; exposes the same (compress, decompress) contract as
 ``repro.core.compression.BBitQuantizer`` so the trainer can swap the Pallas
-path in with ``use_kernel=True``.
+path in with ``impl=pallas`` (or leave ``impl=auto`` to pick it up
+wherever Pallas lowering is available).
 """
 from __future__ import annotations
 

@@ -2,7 +2,8 @@
 
 Padding, buffer doubling and gain handling live here; the kernels in
 ``kernel.py`` see only aligned shapes.  Exposed to the trainer through
-``core.compression.RandK``/``TopK`` with ``kernel=True`` — the index
+``core.compression.RandK``/``TopK`` with ``impl=pallas`` (``impl=auto``
+picks it whenever Pallas lowering is available) — the index
 derivation is untouched, so the kernel path is bit-identical to the jnp
 path (validated in tests/test_kernels.py).
 """

@@ -30,6 +30,7 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.checkpoint import save_checkpoint
 from repro.configs import ARCHS
@@ -151,6 +152,14 @@ def main():
     else:
         print(f"# wire bytes/agent/round: {solver.wire_bytes(params0):,} "
               f"(f32 DDP equivalent: {ddp:,})")
+    if hasattr(solver, "degree_cap"):
+        # learned-graph solver: the candidate topology only bounds the
+        # support — at most degree_cap edges per agent ever carry bytes
+        from repro.core.schedule import union_topology
+        cand = int(np.max(union_topology(solver.graph).degrees()))
+        print(f"# learned graph: degree_cap={solver.degree_cap} live "
+              f"edges/agent (candidate degree {cand}), graph round every "
+              f"{solver.graph_every} rounds")
 
     x0 = jax.tree.map(
         lambda t: jnp.broadcast_to(t[None], (args.agents,) + t.shape).copy(),

@@ -1,0 +1,116 @@
+"""Planted-cluster logistic regression — the personalization testbed.
+
+Agents are partitioned into ``n_clusters`` contiguous groups; each
+cluster ``c`` draws its own ground-truth separator ``w*_c`` and every
+agent in it labels its features with that separator (plus label noise).
+Exact-consensus solvers are forced onto ONE compromise model across all
+clusters; a personalized solver that also LEARNS who to average with
+(``dada:``) can both fit each cluster's optimum and recover the planted
+intra-cluster edge structure — the two acceptance metrics of the
+``graphlearn`` subsystem.
+
+Separation is controlled directly: the cluster separators are scaled
+orthogonalized Gaussians, so ``separation`` sweeps from
+indistinguishable tasks (consensus is optimal) to fully distinct ones
+(consensus is maximally wrong) — what ``benchmarks/
+personalization_sweep.py`` traverses.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.problems.logistic import LogisticProblem
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusteredLogisticProblem(LogisticProblem):
+    """Per-sample/batch loss, gradient and estimator APIs inherit from
+    ``LogisticProblem`` unchanged (they are pointwise in the data); only
+    data GENERATION differs — labels come from per-cluster separators."""
+
+    n: int = 5
+    n_agents: int = 16
+    m: int = 100
+    eps: float = 0.1
+    n_clusters: int = 4
+    separation: float = 3.0  # ||w*_c|| scale; 0 = identical tasks
+    label_noise: float = 0.5  # pre-sign logit noise std
+
+    def __post_init__(self):
+        assert self.n_agents % self.n_clusters == 0, (
+            self.n_agents, self.n_clusters,
+        )
+
+    # ---- planted structure -------------------------------------------------
+
+    def cluster_of(self) -> np.ndarray:
+        """[A] cluster id per agent (contiguous blocks)."""
+        per = self.n_agents // self.n_clusters
+        return np.repeat(np.arange(self.n_clusters), per)
+
+    def intra_cluster_edges(self) -> set:
+        """Undirected ground-truth edge set: every same-cluster pair."""
+        cl = self.cluster_of()
+        return {
+            (i, j)
+            for i in range(self.n_agents)
+            for j in range(i + 1, self.n_agents)
+            if cl[i] == cl[j]
+        }
+
+    def separators(self, key) -> jnp.ndarray:
+        """[n_clusters, n] ground-truth separators: orthonormalized
+        Gaussians scaled by ``separation`` — pairwise-orthogonal, so
+        cluster tasks genuinely disagree once separation > 0."""
+        w = jax.random.normal(key, (self.n_clusters, self.n), jnp.float32)
+        q, _ = jnp.linalg.qr(w.T)  # n >= n_clusters assumed
+        return self.separation * q.T[: self.n_clusters]
+
+    # ---- data --------------------------------------------------------------
+
+    def _with_sep(self, key_sep, key_data, m):
+        ka, kn = jax.random.split(key_data)
+        w_star = self.separators(key_sep)  # [C, n]
+        a = jax.random.normal(
+            ka, (self.n_agents, m, self.n), jnp.float32
+        )
+        w_agent = w_star[jnp.asarray(self.cluster_of())]  # [A, n]
+        logits = jnp.einsum("amn,an->am", a, w_agent)
+        noise = self.label_noise * jax.random.normal(
+            kn, logits.shape, jnp.float32
+        )
+        b = jnp.sign(logits + noise).astype(jnp.float32)
+        b = jnp.where(b == 0, 1.0, b)
+        return {"a": a, "b": b}
+
+    def make_data(self, key):
+        """Train split alone ([A, m, ...] leaves, solver-facing layout);
+        identical to ``make_split(key)[0]``."""
+        return self.make_split(key)[0]
+
+    def make_split(self, key, m_test: int | None = None):
+        """(train, test) drawn from the SAME separators (one fold of
+        ``key``), so test measures generalization to fresh features of
+        the identical per-cluster tasks."""
+        kw = jax.random.fold_in(key, 7)
+        train = self._with_sep(kw, jax.random.fold_in(key, 0), self.m)
+        test = self._with_sep(
+            kw, jax.random.fold_in(key, 1), m_test or self.m
+        )
+        return train, test
+
+    # ---- personalization metrics -------------------------------------------
+
+    def per_agent_test_loss(self, x, test) -> jnp.ndarray:
+        """[A] test loss of per-agent params ``x`` ([A, n] stacked, or a
+        single [n] consensus vector broadcast to every agent)."""
+        if x.ndim == 1:
+            x = jnp.broadcast_to(x, (self.n_agents,) + x.shape)
+        return jax.vmap(self.batch_loss)(x, test)
+
+    def mean_test_loss(self, x, test) -> float:
+        return float(jnp.mean(self.per_agent_test_loss(x, test)))

@@ -1,0 +1,111 @@
+"""Property-based invariants of the learned collaboration graph.
+
+Requires ``hypothesis`` (optional dependency): the whole module skips
+cleanly when it is not installed.  Deterministic counterparts run in
+test_graphlearn.py; here we fuzz the closed-form graph update and a
+real solver round over random candidate graphs:
+
+* every weight row is on the probability simplex with at most
+  ``degree_cap`` nonzeros, supported on its candidates only (empty
+  candidate rows are exactly zero — never nan);
+* the symmetrized coupling ``c`` is a symmetric matrix whose support
+  respects the degree cap at BOTH endpoints;
+* dead edges are never charged: wire accounting scales with
+  ``min(degree, degree_cap)``, not the candidate degree, and the
+  state-dependent live figure never exceeds the static bound.
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from hypothesis import given, settings, strategies as hst  # noqa: E402
+
+from repro.core import vr  # noqa: E402
+from repro.core.costmodel import CostModel  # noqa: E402
+from repro.core.graphlearn import (  # noqa: E402
+    dense_weights,
+    row_simplex_weights,
+)
+from repro.core.solver import make_solver  # noqa: E402
+from repro.core.topology import ErdosRenyi, Exchange  # noqa: E402
+from repro.problems.clusters import ClusteredLogisticProblem  # noqa: E402
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=hst.integers(0, 2**31 - 1),
+    rows=hst.integers(1, 8),
+    slots=hst.integers(1, 10),
+    cap=hst.integers(1, 6),
+    density=hst.floats(0.0, 1.0),
+)
+def test_row_simplex_weights_invariants(seed, rows, slots, cap, density):
+    rng = np.random.default_rng(seed)
+    dist = rng.exponential(1.0, (rows, slots)).astype(np.float32)
+    cand = rng.random((rows, slots)) < density
+    w, keep = row_simplex_weights(
+        jnp.asarray(dist), jnp.asarray(cand), mu=1.0, lambda_g=0.3,
+        degree_cap=cap,
+    )
+    w, keep = np.asarray(w), np.asarray(keep)
+    assert np.isfinite(w).all()
+    assert (w >= 0).all()
+    assert (w[~cand] == 0).all()  # support within candidates
+    assert ((w > 0).sum(axis=1) <= cap).all()  # sparsity cap
+    has = cand.any(axis=1)
+    np.testing.assert_allclose(w[has].sum(axis=1), 1.0, atol=1e-5)
+    assert (w[~has] == 0).all()  # empty rows: zero, not nan
+    # the support is the cap nearest candidates: every kept distance is
+    # <= every dropped candidate distance, row by row
+    for i in np.nonzero(has)[0]:
+        kept = dist[i][keep[i]]
+        dropped = dist[i][cand[i] & ~keep[i]]
+        if kept.size and dropped.size:
+            assert kept.max() <= dropped.min() + 1e-6
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    seed=hst.integers(0, 10_000),
+    cap=hst.integers(1, 4),
+    graph_every=hst.integers(1, 4),
+)
+def test_solver_coupling_invariants_on_random_graphs(seed, cap,
+                                                     graph_every):
+    """One real (jitted) dada round on a random candidate graph: w rows
+    on the simplex, c symmetric with capped support, both supported on
+    the candidate mask."""
+    prob = ClusteredLogisticProblem(n_agents=8, n_clusters=2, m=16)
+    train, _ = prob.make_split(jax.random.key(0))
+    graph = ErdosRenyi(prob.n_agents, p=0.6, seed=seed % 97)
+    ex = Exchange(graph)
+    s = make_solver(
+        f"dada:lr=0.1,mu=0.5,lambda_g=0.1,graph_every={graph_every},"
+        f"degree_cap={cap},batch_size=4",
+        graph, ex, vr.PlainSgd(batch_grad=prob.batch_grad),
+    )
+    st = s.init(jnp.zeros((prob.n_agents, prob.n), jnp.float32))
+    st = jax.jit(s.step)(st, train, jax.random.key(seed))
+
+    w, c = np.asarray(st["w"]), np.asarray(st["c"])
+    mask = graph.slot_mask()
+    assert (w[~mask] == 0).all() and (c[~mask] == 0).all()
+    has = mask.any(axis=1)
+    np.testing.assert_allclose(w[has].sum(axis=1), 1.0, atol=1e-5)
+    assert ((w > 0).sum(axis=1) <= cap).all()
+    assert ((c > 0).sum(axis=1) <= cap).all()
+    C = dense_weights(graph, c)
+    np.testing.assert_allclose(C, C.T, atol=1e-6)
+
+    # dead edges never charged: static accounting clamps at the cap...
+    params = np.zeros((prob.n,), np.float32)
+    deg_eff = int(np.max(np.minimum(graph.degrees(), cap)))
+    per_edge = (s.wire_bytes(params, t=1) // deg_eff) if deg_eff else 0
+    assert s.wire_bytes(params, t=1) == deg_eff * per_edge
+    # ...and the live state never exceeds the static bound
+    assert s.live_wire_bytes(st, params) <= deg_eff * per_edge
+    cm = CostModel.for_learned_graph(graph, degree_cap=cap)
+    assert cm.mean_degree <= float(np.mean(graph.degrees())) + 1e-9
+    assert cm.mean_degree <= cap

@@ -211,6 +211,8 @@ PARITY_SOLVERS = {
     "cold": "cold:lr=0.1,compressor={c}",
     "cedas": "cedas:lr=0.1,compressor={c}",
     "dpdc": "dpdc:lr=0.1,compressor={c}",
+    "dada": "dada:lr=0.1,mu=0.5,lambda_g=0.1,graph_every=2,degree_cap=2,"
+            "compressor={c}",
 }
 PARITY_COMPRESSORS = {
     "identity": "identity",

@@ -42,12 +42,14 @@ ROUNDTRIP_SPECS = {
     "cold": "cold:lr=0.1,compressor=randk:fraction=0.5,sampler=block",
     "cedas": "cedas:lr=0.1,compressor=qbit:bits=4",
     "dpdc": "dpdc:lr=0.1,compressor=qbit:bits=8",
+    "dada": "dada:lr=0.1,mu=0.5,lambda_g=0.1,graph_every=2,degree_cap=2,"
+            "compressor=qbit:bits=8",
 }
 
 
 def test_registry_covers_every_method():
     assert set(solver.SOLVERS) == {
-        "ltadmm", "dsgd", "choco", "lead", "cold", "cedas", "dpdc"
+        "ltadmm", "dsgd", "choco", "lead", "cold", "cedas", "dpdc", "dada"
     }
     assert set(ROUNDTRIP_SPECS) == set(solver.SOLVERS)
 
@@ -181,6 +183,10 @@ PARITY_SPECS = {
     "cedas": "cedas:lr=0.1,compressor=qbit:bits=8",
     "dpdc": "dpdc:lr=0.1,compressor=qbit:bits=8",
     "ltadmm": "ltadmm:compressor=qbit:bits=8",
+    # dada has no pre-refactor ancestor — its entry pins the learned-
+    # graph trajectory against drift since its introduction
+    "dada": "dada:lr=0.1,mu=0.5,lambda_g=0.1,graph_every=2,degree_cap=2,"
+            "compressor=qbit:bits=8",
 }
 
 
@@ -278,10 +284,23 @@ def test_wire_bytes_honors_explicit_t_on_static_graphs(name):
     """Regression: an explicit ``t`` used to be silently ignored on
     static graphs for LT-ADMM.  Every registered solver must now honor
     it via the uniform exact-round path — and on a static graph every
-    round is the same constant, so t=0, t=5 and t=None all agree."""
+    round is the same constant, so t=0, t=5 and t=None all agree.
+    Exception: dada is PERIODIC even on a static graph (graph rounds
+    carry the extra per-edge weight scalar), so its contract is
+    graph_every-periodicity with t=None amortizing the graph message."""
     spec = ROUNDTRIP_SPECS[name]
     s = solver.make_solver(spec, TOPO, EX, _est_for(spec))
     params = {"w": np.zeros((64,), np.float32)}
+    if name == "dada":
+        ge = s.graph_every
+        assert s.wire_bytes(params, t=0) == s.wire_bytes(params, t=ge)
+        assert s.wire_bytes(params, t=1) == s.wire_bytes(params, t=ge + 1)
+        # graph rounds cost strictly more; the amortized figure sits
+        # strictly between the two round kinds
+        assert s.wire_bytes(params, t=0) > s.wire_bytes(params, t=1)
+        assert (s.wire_bytes(params, t=1) < s.wire_bytes(params)
+                < s.wire_bytes(params, t=0))
+        return
     assert s.wire_bytes(params, t=0) == s.wire_bytes(params, t=5) \
         == s.wire_bytes(params)
 
