@@ -1,0 +1,135 @@
+"""Fault-injection sweep: LT-ADMM-CC resilience vs fault rate.
+
+For each fault kind (message drop, payload bit-flip corruption, stale
+round replay, node crash-restart — injected by ``core.faults`` at the
+exchange boundary) this sweeps the injection rate and reports
+rounds-to-tolerance plus the RECOVERY OVERHEAD: the ratio of
+rounds-to-tolerance against the fault-free run of the same recipe.
+Detection is the sealed-payload checksum + round tag; recovery is the
+async-ADMM hold on edges that went dark for the round.  Everything is
+seeded, so every row is bit-replayable.
+
+    PYTHONPATH=src python -m benchmarks.fault_sweep
+    PYTHONPATH=src python -m benchmarks.fault_sweep --smoke
+
+``--smoke`` runs the single fixed-seed combined-fault recipe whose row
+(``smoke_row``) the perf-smoke harness (``benchmarks.run
+--perf-smoke``) folds into the tracked BENCH JSON.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import make_problem, run_solver
+from repro.core import vr
+from repro.core.solver import make_solver
+
+BASE_SPEC = "ltadmm:compressor=qbit:bits=8"
+SMOKE_FAULTS = "faults:drop=0.05,corrupt=1e-3,crash=0.01,seed=0"
+SWEEP = (
+    ("drop", (0.02, 0.05, 0.1)),
+    ("corrupt", (1e-3, 5e-3, 1e-2)),
+    ("stale", (0.02, 0.05, 0.1)),
+    ("crash", (0.01, 0.02, 0.05)),
+)
+ROUNDS = 600
+TOL = 1e-8
+
+
+def _solver_for(fault_spec, topology="ring"):
+    prob, data, graph, ex = make_problem(seed=0, topology=topology)
+    saga = vr.SagaTable(sample_grad=prob.sample_grad, m=prob.m)
+    spec = BASE_SPEC if fault_spec is None else (
+        # nested-spec folding: ``|`` separates the faults params so the
+        # outer solver spec's ``,`` parser leaves them intact
+        f"{BASE_SPEC},faults={fault_spec.replace(',', '|')}"
+    )
+    return prob, data, make_solver(spec, graph, ex, saga)
+
+
+def _converge(fault_spec, rounds=ROUNDS, tol=TOL):
+    """-> (rounds_to_tol or None, final ||grad||^2)."""
+    prob, data, solver = _solver_for(fault_spec)
+    idx, gns = run_solver(prob, data, solver, rounds, metric_every=10)
+    g, i = np.asarray(gns), np.asarray(idx)
+    hit = np.nonzero(g <= tol)[0]
+    return (int(i[hit[0]]) if hit.size else None), float(g[-1])
+
+
+def run(print_rows=True, rounds=ROUNDS, tol=TOL):
+    """Rows ``(name, rounds_to_tol, final_gradnorm_sq, overhead)`` where
+    overhead is relative to the fault-free baseline (NaN if the faulty
+    run never reached tolerance)."""
+    base_rounds, base_final = _converge(None, rounds, tol)
+    rows = [("faults/none", base_rounds, base_final, 1.0)]
+    for kind, rates in SWEEP:
+        for rate in rates:
+            r2t, final = _converge(f"faults:{kind}={rate},seed=0",
+                                   rounds, tol)
+            overhead = (r2t / base_rounds
+                        if r2t is not None and base_rounds else float("nan"))
+            rows.append((f"faults/{kind}={rate:g}", r2t, final, overhead))
+    if print_rows:
+        print(f"{'sweep point':24s} {'rounds@1e-8':>12s} "
+              f"{'final ||grad||^2':>17s} {'overhead':>9s}")
+        for name, r2t, final, ov in rows:
+            print(f"{name:24s} {str(r2t):>12s} {final:17.3e} {ov:9.2f}")
+    return rows
+
+
+def smoke_row(rounds=ROUNDS, tol=TOL):
+    """Fixed-seed combined-fault perf row (same schema as the rows in
+    ``benchmarks.run.perf_smoke``): LT-ADMM-CC under simultaneous drop
+    + corruption + crash faults must still converge, at a bounded
+    rounds-to-tolerance overhead — this is the regression-gated
+    fault-recovery smoke."""
+    prob, data, solver = _solver_for(SMOKE_FAULTS)
+
+    runner = jax.jit(
+        lambda d: run_solver(prob, d, solver, rounds, metric_every=10)
+    )
+
+    def once():
+        t0 = time.perf_counter()
+        idx, gns = runner(data)
+        jax.block_until_ready(gns)
+        return time.perf_counter() - t0, idx, gns
+
+    cold_s, _, _ = once()
+    warm_s, idx, gns = once()
+    g, i = np.asarray(gns), np.asarray(idx)
+    hit = np.nonzero(g <= tol)[0]
+    return {
+        "name": "admm/ring/q8+saga+faults",
+        "spec": SMOKE_FAULTS,
+        "rounds": rounds,
+        "cold_wall_s": round(cold_s, 3),
+        "warm_wall_s": round(warm_s, 3),
+        "rounds_to_tol": int(i[hit[0]]) if hit.size else None,
+        "tol": tol,
+        "final_gradnorm_sq": float(g[-1]),
+        "wire_bytes_per_round": solver.wire_bytes(
+            {"x": np.zeros((prob.n,), np.float32)}
+        ),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="single fixed-seed combined-fault recipe; prints "
+                         "the BENCH-schema JSON row")
+    args = ap.parse_args()
+    if args.smoke:
+        print(json.dumps(smoke_row(), indent=2))
+    else:
+        run()
+
+
+if __name__ == "__main__":
+    main()

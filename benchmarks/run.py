@@ -87,6 +87,12 @@ def perf_smoke(out_path: str) -> None:
     from benchmarks import personalization_sweep
 
     results.append(personalization_sweep.perf_row())
+    # fault-recovery lane: LT-ADMM-CC under seeded drop+corrupt+crash
+    # faults (core.faults) must keep converging — the row gates both the
+    # recovery overhead (rounds_to_tol) and the seal wire overhead
+    from benchmarks import fault_sweep
+
+    results.append(fault_sweep.smoke_row())
     kernel_rows = kernels_bench.run(print_rows=False, fast=True)
     payload = {
         "schema": 1,
@@ -109,8 +115,8 @@ def perf_smoke(out_path: str) -> None:
 
 def full_csv() -> None:
     from benchmarks import kernels_bench, paper_fig1, paper_fig2, paper_table1
-    from benchmarks import (personalization_sweep, roofline, schedule_sweep,
-                            topology_sweep)
+    from benchmarks import (fault_sweep, personalization_sweep, roofline,
+                            schedule_sweep, topology_sweep)
 
     t0 = time.time()
     print("name,us_per_call,derived")
@@ -126,6 +132,9 @@ def full_csv() -> None:
               f";wire_bytes_per_round={wire};t_per_round={t_round:.1f}")
     for name, val in paper_table1.run(print_rows=False):
         print(f"{name},,cost={val}")
+    for name, r2t, final, ov in fault_sweep.run(print_rows=False):
+        print(f"{name},,rounds_to_tol={r2t};final_gradnorm2={final:.3e}"
+              f";recovery_overhead={ov:.2f}")
     for name, cons, dd, p, r in personalization_sweep.run(print_rows=False):
         print(f"{name},,consensus_test_loss={cons:.4f}"
               f";dada_test_loss={dd:.4f}"

@@ -1,1 +1,5 @@
-from repro.checkpoint.store import load_checkpoint, save_checkpoint  # noqa: F401
+from repro.checkpoint.store import (  # noqa: F401
+    CheckpointCorruptError,
+    load_checkpoint,
+    save_checkpoint,
+)

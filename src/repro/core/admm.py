@@ -75,6 +75,10 @@ class LTADMMConfig:
     batch_size: int = 1  # |B_i|
     compressor_x: Any = compression.Identity()
     compressor_z: Any = compression.Identity()
+    # core.faults.FaultPlane | None: payloads are sealed (crc + round
+    # tag), exchanges fault-injected, and detected failures downgrade
+    # edges to the async-ADMM hold — packed schedule path only
+    faults: Any = None
 
     @property
     def lean(self) -> bool:
@@ -276,6 +280,12 @@ def step(
     if hasattr(topo, "round_mask"):
         return step_schedule(cfg, topo, exchange, vr_est, state, data,
                              round_key)
+    if cfg.faults is not None:
+        raise ValueError(
+            "cfg.faults requires a TopologySchedule (the hold semantics "
+            "live on the schedule path); wrap static graphs with "
+            "schedule.static_schedule — make_solver does this "
+            "automatically")
     if _is_packed(state.x):
         return _step_packed(cfg, topo, exchange, vr_est, state, data,
                             round_key)
@@ -610,6 +620,10 @@ def step_schedule(
     if _is_packed(state.x):
         return _step_schedule_packed(cfg, sched, exchange, vr_est, state,
                                      data, round_key)
+    if cfg.faults is not None:
+        raise NotImplementedError(
+            "fault injection runs on the packed schedule path only "
+            "(packed=true); the tree path has no sealed wire format")
     return _step_schedule_tree(cfg, sched, exchange, vr_est, state, data,
                                round_key)
 
@@ -779,6 +793,13 @@ def _step_schedule_packed(
     nbr = jnp.asarray(topo.neighbor_table())
     act = sched.round_mask(state.k)[:, :, None]  # [A, S, 1] traced bool
     node_k = sched.round_node_mask(state.k)  # [A] traced bool | None
+    fp = cfg.faults
+    if fp is not None:
+        # a crashed agent is inert for the round: x frozen (node hold),
+        # every incident edge dark (folded into ok below) — "restart"
+        # resumes from the held state, the async-ADMM recovery
+        alive = ~fp.crash_mask(state.k, A)  # [A]
+        node_k = alive if node_k is None else node_k & alive
     # fused-path base seeds (salts of _key_xe/_key_z)
     bxe = jax.random.fold_in(round_key, 17)
     bz = jax.random.fold_in(round_key, 13)
@@ -798,10 +819,6 @@ def _step_schedule_packed(
         cx, lambda aid, nid: _key_xe(round_key, aid, nid), bxe,
         aid2, nbr, x_new[:, None] - u_adv, like,
     )
-    x_hat_edge_new = jnp.where(act, u_adv + rec_x, xh)
-    u_edge_new = (
-        None if cfg.lean else jnp.where(act, u_adv, state.u_edge)
-    )
 
     # ---- 5-6. sender-side error feedback for z (gated below) --------------
     m_z, rec_z = compression.plane_compress(
@@ -811,8 +828,34 @@ def _step_schedule_packed(
     z_hat_own = state.s + rec_z
 
     # ---- the only cross-agent communication (all slots, every round) ------
-    recv_x = exchange.exchange_batched(m_x)
-    recv_z = exchange.exchange_batched(m_z)
+    if fp is None:
+        recv_x = exchange.exchange_batched(m_x)
+        recv_z = exchange.exchange_batched(m_z)
+    else:
+        # seal -> fault-armed exchange -> verify: a failed checksum or
+        # stale/poisoned round tag marks the slot not-ok; both payloads
+        # of a round share the link, so one ok mask covers x and z
+        armed = dataclasses.replace(exchange, faults=fp)
+        recv_x, ok_x = compression.verify_plane(
+            armed.exchange_batched(
+                compression.seal_plane(m_x, state.k, nd=2),
+                round_index=state.k),
+            state.k)
+        recv_z, ok_z = compression.verify_plane(
+            armed.exchange_batched(
+                compression.seal_plane(m_z, state.k, nd=2),
+                round_index=state.k),
+            state.k)
+        ok = ok_x & ok_z & alive[:, None]
+        # NAK symmetrization over the (assumed reliable) control plane:
+        # an edge advances only when BOTH endpoints received cleanly,
+        # else duals + EF mirrors hold on both sides in lockstep
+        edge_ok = ok & exchange.exchange_batched(ok)
+        act = act & edge_ok[:, :, None]
+    x_hat_edge_new = jnp.where(act, u_adv + rec_x, xh)
+    u_edge_new = (
+        None if cfg.lean else jnp.where(act, u_adv, state.u_edge)
+    )
 
     # ---- 7. receiver-side mirrors, gated by the same mask -----------------
     xhn = state.x_hat_nbr
@@ -868,7 +911,9 @@ def consensus_error(state: LTADMMState):
 def _edge_payload_bytes(cfg: LTADMMConfig, params) -> int:
     bx = compression.tree_wire_bytes(cfg.compressor_x, params)
     bz = compression.tree_wire_bytes(cfg.compressor_z, params)
-    return bx + bz
+    # sealed payloads (fault detection) carry crc + tag on both messages
+    seal = 2 * compression.SEAL_BYTES if cfg.faults is not None else 0
+    return bx + bz + seal
 
 
 def wire_bytes_per_round(cfg: LTADMMConfig, topo: Topology, params) -> int:

@@ -48,7 +48,24 @@ from repro.core.schedule import TopologySchedule, metropolis_schedule
 from repro.core.topology import Topology, metropolis_weights
 
 
-def gossip(topo: Topology, tree, k=None):
+def _metropolis_online(union, act):
+    """Traced Metropolis–Hastings [A, A] weights of the graph whose
+    active slots are ``act`` ([A, S] bool, symmetric per edge, subset of
+    the union's real slots).  Matches ``metropolis_weights`` on the
+    induced graph; a fully isolated agent gets the identity row (keeps
+    its own value).  Used by the fault path, where the surviving edge
+    set is a traced function of the round."""
+    A = union.n_agents
+    nbr = jnp.asarray(union.neighbor_table())
+    actf = act.astype(jnp.float32)
+    deg = jnp.sum(actf, axis=1)  # [A]
+    wslot = actf / (1.0 + jnp.maximum(deg[:, None], deg[nbr]))
+    W = jnp.zeros((A, A), jnp.float32).at[
+        jnp.arange(A)[:, None], nbr].add(wslot)
+    return W + jnp.diag(1.0 - jnp.sum(W, axis=1))
+
+
+def gossip(topo: Topology, tree, k=None, faults=None):
     """W @ x with the Metropolis–Hastings weights of ``topo`` (stacked
     [A, ...] layout).  W is a compile-time constant [A, A] matrix — fine at
     simulation scale; on a mesh the per-slot Exchange is the wire-efficient
@@ -58,8 +75,25 @@ def gossip(topo: Topology, tree, k=None):
     selects that round's mixing matrix — Metropolis–Hastings weights of
     the ACTIVE graph, doubly stochastic every round, contractive over a
     jointly connected period.  The whole periodic stack is a compile-time
-    constant; per round the select is one gather."""
-    if isinstance(topo, TopologySchedule):
+    constant; per round the select is one gather.
+
+    ``faults`` (a ``core.faults.FaultPlane``): the dense gossip path has
+    no per-edge payload wire, so fault darkness is oracle-based — the
+    round's edge set is refined by ``faults.edge_ok(k, union)`` (exactly
+    the mask the LT-ADMM checksum/NAK detection would produce) and the
+    Metropolis weights of the *surviving* graph are built in-trace, so
+    every round stays doubly stochastic and a fault-isolated agent
+    simply keeps its own value that round."""
+    if faults is not None and faults.active:
+        assert k is not None, "faulty gossip needs the round index k"
+        if isinstance(topo, TopologySchedule):
+            act = topo.round_mask(k) & faults.edge_ok(k, topo.union)
+            union = topo.union
+        else:
+            union = topo
+            act = jnp.asarray(topo.slot_mask()) & faults.edge_ok(k, topo)
+        W = _metropolis_online(union, act)
+    elif isinstance(topo, TopologySchedule):
         assert k is not None, "time-varying gossip needs the round index k"
         Ws = jnp.asarray(metropolis_schedule(topo))
         W = Ws[jnp.mod(k, topo.period)]
@@ -230,6 +264,13 @@ class GossipSolverMixin:
         # merged masks isolate it, so active neighbors never read it).
         nm = (self.topo.round_node_mask(k)
               if isinstance(self.topo, TopologySchedule) else None)
+        fp = getattr(self, "faults", None)
+        if fp is not None and fp.crash > 0:
+            # crashed agents hold like non-participating ones — their
+            # edges are already dark via gossip's edge_ok oracle
+            A = jax.tree.leaves(state["x"])[0].shape[0]
+            alive = ~fp.crash_mask(k, A)
+            nm = alive if nm is None else nm & alive
         if nm is not None:
             st = {
                 f: tree_map(
@@ -261,6 +302,7 @@ class DSGD(GossipSolverMixin):
     batch_size: int = 1
     grad_est: Any = None
     packed: bool = True
+    faults: Any = None  # core.faults.FaultPlane | None
     name: str = "dsgd"
 
     def _init(self, x0):
@@ -269,7 +311,7 @@ class DSGD(GossipSolverMixin):
     def _step(self, state, data, key, k, est):
         g = _sample_grads(est, state["x"], data, key,
                           self.batch_size)
-        x = gossip(self.topo, state["x"], k)
+        x = gossip(self.topo, state["x"], k, self.faults)
         x = tree_map(lambda a, b: a - self.lr * b, x, g)
         return {"x": x}
 
@@ -288,6 +330,7 @@ class ChocoSGD(GossipSolverMixin):
     batch_size: int = 1
     grad_est: Any = None
     packed: bool = True
+    faults: Any = None  # core.faults.FaultPlane | None
     name: str = "choco"
 
     state_fields = ("x", "xhat")
@@ -304,7 +347,7 @@ class ChocoSGD(GossipSolverMixin):
             tree_sub(x, xhat), _like(x),
         )
         xhat = tree_map(jnp.add, xhat, q)
-        mix = tree_sub(gossip(self.topo, xhat, k), xhat)
+        mix = tree_sub(gossip(self.topo, xhat, k, self.faults), xhat)
         x = tree_map(lambda a, b: a + self.gossip_lr * b, x, mix)
         return {"x": x, "xhat": xhat}
 
@@ -326,6 +369,7 @@ class LEAD(GossipSolverMixin):
     batch_size: int = 1
     grad_est: Any = None
     packed: bool = True
+    faults: Any = None  # core.faults.FaultPlane | None
     name: str = "lead"
 
     state_fields = ("x", "h", "d")
@@ -346,7 +390,7 @@ class LEAD(GossipSolverMixin):
             tree_sub(y, h), _like(x),
         )
         yhat = tree_map(jnp.add, h, q)
-        yhat_w = gossip(self.topo, yhat, k)
+        yhat_w = gossip(self.topo, yhat, k, self.faults)
         diff = tree_sub(yhat, yhat_w)
         h = tree_map(lambda a, b: (1 - self.alpha) * a + self.alpha * b,
                      h, yhat)
@@ -371,6 +415,7 @@ class COLD(GossipSolverMixin):
     batch_size: int = 1
     grad_est: Any = None
     packed: bool = True
+    faults: Any = None  # core.faults.FaultPlane | None
     name: str = "cold"
 
     state_fields = ("x", "h", "d")
@@ -391,7 +436,7 @@ class COLD(GossipSolverMixin):
             tree_sub(y, h), _like(x),
         )
         yhat = tree_map(jnp.add, h, q)  # innovation state: h <- yhat
-        yhat_w = gossip(self.topo, yhat, k)
+        yhat_w = gossip(self.topo, yhat, k, self.faults)
         diff = tree_sub(yhat, yhat_w)
         d = tree_map(
             lambda a, b: a + self.gamma_mix / (2 * self.lr) * b, d, diff
@@ -414,6 +459,7 @@ class CEDAS(GossipSolverMixin):
     batch_size: int = 1
     grad_est: Any = None
     packed: bool = True
+    faults: Any = None  # core.faults.FaultPlane | None
     name: str = "cedas"
 
     state_fields = ("x", "psi_prev", "xhat")
@@ -434,7 +480,7 @@ class CEDAS(GossipSolverMixin):
         xhat = tree_map(jnp.add, xhat, q)
         # (I+W)/2 mixing applied through the tracked copies
         half_mix = tree_map(
-            lambda a, b: 0.5 * (a + b), xhat, gossip(self.topo, xhat, k)
+            lambda a, b: 0.5 * (a + b), xhat, gossip(self.topo, xhat, k, self.faults)
         )
         x = tree_map(
             lambda mi, hm, xh: mi + self.gossip_lr * (hm - xh),
@@ -458,6 +504,7 @@ class DPDC(GossipSolverMixin):
     batch_size: int = 1
     grad_est: Any = None
     packed: bool = True
+    faults: Any = None  # core.faults.FaultPlane | None
     name: str = "dpdc"
 
     state_fields = ("x", "v", "xhat")
@@ -474,7 +521,7 @@ class DPDC(GossipSolverMixin):
             tree_sub(x, xhat), _like(x),
         )
         xhat = tree_map(jnp.add, xhat, q)
-        lap = tree_sub(xhat, gossip(self.topo, xhat, k))  # (I - W) x̂
+        lap = tree_sub(xhat, gossip(self.topo, xhat, k, self.faults))  # (I - W) x̂
         v_new = tree_map(lambda a, b: a + self.dual_lr * b, v, lap)
         x = tree_map(
             lambda a, gg, vv, ll: a

@@ -613,6 +613,67 @@ def plane_decompress(comp, keyfn, base_key, senders, receivers, payload,
 
 
 # ---------------------------------------------------------------------------
+# Sealed payloads: additive checksum + round tag (fault detection)
+# ---------------------------------------------------------------------------
+
+# wire overhead of a sealed message: crc + tag, one uint32 each
+SEAL_BYTES = 8
+
+_SEAL_KEYS = ("crc", "tag")
+_UINT_OF_WIDTH = {1: jnp.uint8, 2: jnp.uint16, 4: jnp.uint32}
+
+
+def _u32_view(leaf):
+    """Bit-exact uint32 view of a leaf (narrow dtypes widen losslessly)."""
+    udt = _UINT_OF_WIDTH[jnp.dtype(leaf.dtype).itemsize]
+    return jax.lax.bitcast_convert_type(leaf, udt).astype(jnp.uint32)
+
+
+def payload_checksum(payload, nd: int):
+    """Additive mod-2^32 checksum over the data leaves of a payload whose
+    leaves carry ``nd`` lead (message-batch) dims — shape ``[lead]``.
+
+    Additive (not a CRC polynomial) on purpose: any single bit flip in
+    any leaf perturbs the sum by a nonzero power of two, and *linearity*
+    lets fault injection rewind a round tag checksum-consistently — a
+    stale message stays crc-valid and is rejected by the tag check
+    alone, keeping staleness and corruption distinguishable on the wire.
+    """
+    tot = None
+    for k in payload:
+        if k in _SEAL_KEYS:
+            continue
+        v = _u32_view(payload[k])
+        s = jnp.sum(v.reshape(v.shape[:nd] + (-1,)), axis=-1,
+                    dtype=jnp.uint32)
+        tot = s if tot is None else tot + s
+    return tot
+
+
+def seal_plane(payload, tag, nd: int):
+    """Add ``crc``/``tag`` uint32 leaves (``crc = checksum + tag``) to a
+    batched payload; ``tag`` is the round index (traced ok)."""
+    csum = payload_checksum(payload, nd)
+    tag_arr = jnp.broadcast_to(jnp.asarray(tag).astype(jnp.uint32),
+                               csum.shape)
+    return Payload(**dict(payload), crc=csum + tag_arr, tag=tag_arr)
+
+
+def verify_plane(payload, expected_tag):
+    """Strip the seal and verdict each message: ``(data_payload, ok)``
+    with ``ok`` [lead-shaped] True iff the checksum holds AND the round
+    tag matches ``expected_tag``.  Failed messages downgrade their edge
+    to dark (async-ADMM hold) — callers gate on ``ok``, never on the
+    possibly-poisoned data."""
+    crc, tag = payload["crc"], payload["tag"]
+    data = Payload(**{k: v for k, v in payload.items()
+                      if k not in _SEAL_KEYS})
+    want = jnp.asarray(expected_tag).astype(jnp.uint32)
+    ok = (payload_checksum(data, crc.ndim) + tag == crc) & (tag == want)
+    return data, ok
+
+
+# ---------------------------------------------------------------------------
 # Registry + spec parsing (mirrors core.solver's SOLVERS entries)
 # ---------------------------------------------------------------------------
 

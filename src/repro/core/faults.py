@@ -1,0 +1,308 @@
+"""Seeded fault plane: deterministic injection of unplanned failures.
+
+The schedule layer (``core.schedule``) models *planned* outages — edges
+and nodes that are deterministically inactive in a known periodic
+pattern.  This module models *unplanned* faults: messages lost in
+flight, payloads corrupted on the wire, rounds arriving late, and
+agents crashing mid-round.  A :class:`FaultPlane` draws every fault
+from the Threefry counter PRNG in ``kernels.prng`` keyed on
+``(seed, kind, round, receiver, slot)``, so a faulty run is a pure
+function of its spec string — replayable bit-for-bit.
+
+Spec grammar mirrors the compressor registry
+(``faults:drop=0.05,corrupt=1e-3,stale=0.02,crash=0.01``; ``|`` is
+accepted for ``,`` when nested inside a solver spec):
+
+==========  =================================================================
+``drop``    per-message loss probability (payload zeroed, round tag poisoned)
+``corrupt`` per-message single-bit flip probability (seeded bit position)
+``stale``   per-message probability of delivering the previous round's tag
+``crash``   per-node per-round crash probability (node inert for the round,
+            all incident edges dark; state held — "restart" = resume from
+            the held state next round, the async-ADMM recovery semantics)
+``seed``    fault stream seed (independent of compression/solver streams)
+``start``   first round index at which faults fire (default 0)
+==========  =================================================================
+
+Injection happens at the ``Exchange`` boundary
+(``Exchange.exchange_batched(..., round_index=k)`` with a fault-armed
+exchange) on *sealed* payloads — see ``compression.seal_plane`` /
+``verify_plane`` for the crc+tag wire format.  The x- and z-payloads of
+one round share a link: fault draws are per (receiver, slot, round), so
+both payloads of a transmission window live or die together.
+
+Detection vs oracle: solvers with a real wire path (LT-ADMM) detect
+faults from checksum/tag verification plus a NAK symmetrization over
+the reliable control plane; dense-gossip baselines have no per-edge
+payload wire, so they consult :meth:`FaultPlane.edge_ok` — an oracle
+that computes *exactly* the mask the wire-path detection produces
+(pinned by tests/test_faults.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import compression
+from repro.kernels import prng
+
+# seed-fold salt for the fault stream; distinct from admm.py's message
+# salts (7, 11, 13, 17) so faults never correlate with compression noise
+FAULT_SALT = 23
+
+_KIND_DROP = 0
+_KIND_CORRUPT = 1
+_KIND_STALE = 2
+_KIND_CRASH = 3
+_SEAL_KEYS = ("crc", "tag")
+
+_UINT_OF_WIDTH = {1: jnp.uint8, 2: jnp.uint16, 4: jnp.uint32}
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlane:
+    """Seeded, rate-parameterized fault injector (see module docstring).
+
+    Frozen + scalar-only so it hashes and nests inside frozen solver
+    configs; every mask is derived on the fly from ``(seed, kind, k)``.
+    """
+
+    drop: float = 0.0
+    corrupt: float = 0.0
+    stale: float = 0.0
+    crash: float = 0.0
+    seed: int = 0
+    start: int = 0
+    name: str = "faults"
+
+    def __post_init__(self):
+        for kind in ("drop", "corrupt", "stale", "crash"):
+            rate = getattr(self, kind)
+            if not 0.0 <= float(rate) <= 1.0:
+                raise ValueError(
+                    f"faults: {kind}={rate!r} outside [0, 1]")
+        if int(self.start) < 0:
+            raise ValueError(f"faults: start={self.start!r} negative")
+
+    @property
+    def active(self) -> bool:
+        return (self.drop > 0 or self.corrupt > 0 or self.stale > 0
+                or self.crash > 0)
+
+    # -- seeded masks -----------------------------------------------------
+
+    def _base_seed(self):
+        s0 = np.uint32(int(self.seed) & 0xFFFFFFFF)
+        s1 = np.uint32((int(self.seed) >> 32) & 0xFFFFFFFF) ^ np.uint32(
+            0x9E3779B9)
+        return prng.fold((s0, s1), FAULT_SALT)
+
+    def _round_seed(self, kind: int, k):
+        return prng.fold(self._base_seed(), kind, prng._u32(k))
+
+    def _mask(self, kind: int, rate: float, k, shape):
+        """Bernoulli(rate) over ``shape`` counters, per (kind, round)."""
+        if rate <= 0.0:
+            return jnp.zeros(shape, bool)
+        ctr = jnp.arange(int(np.prod(shape))).reshape(shape)
+        u = prng.uniform01(prng.random_bits(self._round_seed(kind, k), ctr))
+        m = u < np.float32(rate)
+        if self.start > 0:
+            m = m & (jnp.asarray(k) >= self.start)
+        return m
+
+    def crash_mask(self, k, n_agents: int):
+        """[A] bool: True where the agent is crashed for round ``k``."""
+        return self._mask(_KIND_CRASH, self.crash, k, (n_agents,))
+
+    def message_masks(self, k, topo):
+        """Receiver-indexed [A, S] (drop, corrupt, stale) masks for round
+        ``k``; ``drop`` folds in sender crashes (a crashed sender's
+        message is lost on every link it feeds)."""
+        A, S = topo.n_agents, topo.n_slots
+        nbr = jnp.asarray(topo.neighbor_table())
+        drop = self._mask(_KIND_DROP, self.drop, k, (A, S))
+        corrupt = self._mask(_KIND_CORRUPT, self.corrupt, k, (A, S))
+        stale = self._mask(_KIND_STALE, self.stale, k, (A, S))
+        drop = drop | self.crash_mask(k, A)[nbr]
+        return drop, corrupt, stale
+
+    # -- injection (wire path) -------------------------------------------
+
+    def inject(self, tree, topo, k):
+        """Apply round-``k`` faults to routed *sealed* payload(s).
+
+        ``tree`` is what ``Exchange`` routing produced: Payload leaves
+        whose arrays are receiver-indexed ``[A, S, ...]``.  Drops zero
+        the data leaves and poison the tag; corruption flips one seeded
+        bit of the first data leaf; staleness rewinds the round tag by
+        one *checksum-consistently* (the additive crc stays valid, so
+        stale is rejected by the tag check alone — distinguishable from
+        corruption).  Applied corrupt -> stale -> drop.
+        """
+        is_payload = lambda x: isinstance(x, compression.Payload)  # noqa: E731
+        return jax.tree.map(
+            lambda p: self._inject_payload(p, topo, k), tree,
+            is_leaf=is_payload,
+        )
+
+    def _inject_payload(self, p, topo, k):
+        if not isinstance(p, compression.Payload):
+            raise TypeError(
+                f"fault injection needs sealed Payloads, got {type(p)!r}")
+        leaves = dict(p)
+        if any(s not in leaves for s in _SEAL_KEYS):
+            raise ValueError(
+                "fault injection needs sealed payloads (crc+tag leaves); "
+                "route through compression.seal_plane first")
+        drop, corrupt, stale = self.message_masks(k, topo)
+        data_keys = [n for n in sorted(leaves) if n not in _SEAL_KEYS]
+        if self.corrupt > 0.0 and data_keys:
+            leaves[data_keys[0]] = self._flip_bit(
+                leaves[data_keys[0]], corrupt, k)
+        one = np.uint32(1)
+        leaves["tag"] = jnp.where(stale, leaves["tag"] - one, leaves["tag"])
+        leaves["crc"] = jnp.where(stale, leaves["crc"] - one, leaves["crc"])
+        for n in data_keys:
+            v = leaves[n]
+            m = jnp.reshape(drop, drop.shape + (1,) * (v.ndim - drop.ndim))
+            leaves[n] = jnp.where(m, jnp.zeros_like(v), v)
+        leaves["tag"] = jnp.where(drop, prng.BROADCAST, leaves["tag"])
+        leaves["crc"] = jnp.where(drop, np.uint32(0), leaves["crc"])
+        return compression.Payload(**leaves)
+
+    def _flip_bit(self, leaf, corrupt, k):
+        """Flip one seeded bit per corrupted message in ``leaf``
+        ([A, S, ...]): element and bit position derive from a second
+        stream of the corrupt seed, so replay is exact."""
+        width = jnp.dtype(leaf.dtype).itemsize
+        udt = _UINT_OF_WIDTH[width]
+        u = jax.lax.bitcast_convert_type(leaf, udt)
+        A, S = u.shape[:2]
+        flat = u.reshape(A, S, -1)
+        L, nbits = flat.shape[-1], width * 8
+        ctr = jnp.arange(A * S).reshape(A, S)
+        bits = prng.random_bits(
+            self._round_seed(_KIND_CORRUPT, k), ctr, stream=1)
+        elem = (bits % np.uint32(L)).astype(jnp.int32)
+        bit = (bits // np.uint32(L)) % np.uint32(nbits)
+        hit = (jnp.arange(L)[None, None, :] == elem[:, :, None])
+        hit = hit & corrupt[:, :, None]
+        flip = jnp.left_shift(jnp.uint32(1), bit).astype(udt)
+        xor = jnp.where(hit, flip[:, :, None], jnp.zeros((), udt))
+        return jax.lax.bitcast_convert_type(
+            (flat ^ xor).reshape(u.shape), leaf.dtype)
+
+    # -- oracle (dense-gossip path) --------------------------------------
+
+    def edge_ok(self, k, topo):
+        """[A, S] bool: True where the edge survives round ``k`` at BOTH
+        endpoints — exactly the act-mask refinement the LT-ADMM wire
+        path's checksum/tag detection + NAK symmetrization produces
+        (equivalence pinned by tests).  Masked slots are False."""
+        A, S = topo.n_agents, topo.n_slots
+        nbr = jnp.asarray(topo.neighbor_table())
+        rev = jnp.asarray(topo.reverse_slot)
+        drop, corrupt, stale = self.message_masks(k, topo)
+        bad = drop | corrupt | stale | self.crash_mask(k, A)[:, None]
+        bad = bad | bad[nbr, rev[None, :]]
+        return ~bad & jnp.asarray(topo.slot_mask())
+
+    def edge_dark(self, k, topo):
+        """[A, S] bool: real slots suppressed by round-``k`` faults."""
+        return jnp.asarray(topo.slot_mask()) & ~self.edge_ok(k, topo)
+
+
+# ---------------------------------------------------------------------------
+# Registry + spec parsing (same shape as compression.COMPRESSORS)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultEntry:
+    """One registered fault model: class + the spec params it accepts
+    (validated BEFORE construction, so misspellings fail with the valid
+    names, not a TypeError)."""
+
+    name: str
+    cls: type
+    params: frozenset
+    doc: str = ""
+
+
+def _entry(cls, doc: str) -> FaultEntry:
+    name = cls.__dataclass_fields__["name"].default
+    params = frozenset(
+        f.name for f in dataclasses.fields(cls)
+        if f.init and f.name != "name"
+    )
+    return FaultEntry(name=name, cls=cls, params=params, doc=doc)
+
+
+FAULTS: dict[str, FaultEntry] = {
+    e.name: e
+    for e in (
+        _entry(FaultPlane,
+               "iid seeded drops/bit-flips/stale-tags/node-crashes"),
+    )
+}
+
+
+def fault_entry(name: str) -> FaultEntry:
+    try:
+        return FAULTS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown fault model {name!r}; choose from {sorted(FAULTS)}"
+        ) from None
+
+
+def _parse_spec(spec: str):
+    name, _, rest = spec.partition(":")
+    entry = fault_entry(name)
+    params = {}
+    for item in rest.replace("|", ",").split(","):
+        if not item:
+            continue
+        k, eq, v = item.partition("=")
+        if not eq:
+            raise ValueError(
+                f"malformed fault param {item!r} in spec {spec!r} "
+                f"(expected k=v)")
+        params[k.strip()] = compression.coerce_param(v.strip())
+    return entry, params
+
+
+def _construct(entry: FaultEntry, params: dict):
+    unknown = sorted(set(params) - entry.params)
+    if unknown:
+        raise ValueError(
+            f"fault model {entry.name!r} got unknown param(s) {unknown}; "
+            f"valid params: {sorted(entry.params)}")
+    try:
+        return entry.cls(**params)
+    except TypeError as e:
+        raise ValueError(
+            f"bad params for fault model {entry.name!r}: {e}") from None
+
+
+def validate_spec(spec: str) -> None:
+    """Parse-time validation of a fault spec (used by the solver grammar
+    so ``make_solver("ltadmm:faults=faults:drp=0.1", ...)`` fails up
+    front, naming the valid params)."""
+    entry, params = _parse_spec(spec)
+    _construct(entry, params)
+
+
+def get_faults(spec) -> FaultPlane:
+    """FaultPlane from a spec string
+    (``faults:drop=0.05,corrupt=1e-3,stale=0.02,crash=0.01``; ``|``
+    accepted for ``,`` when nested in a solver spec).  Passes
+    ``FaultPlane``/``None`` through unchanged."""
+    if spec is None or isinstance(spec, FaultPlane):
+        return spec
+    entry, params = _parse_spec(spec)
+    return _construct(entry, params)

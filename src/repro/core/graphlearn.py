@@ -210,6 +210,7 @@ class DadaSolver(GossipSolverMixin):
     compressor: Any = None  # None = exact broadcast (identity wire)
     grad_est: Any = None
     packed: bool = True
+    faults: Any = None  # core.faults.FaultPlane | None (oracle darkness)
     name: str = "dada"
 
     state_fields = ("x", "xhat", "w", "c")
@@ -274,6 +275,12 @@ class DadaSolver(GossipSolverMixin):
         am = jnp.asarray(self._cand_mask())
         if isinstance(self.topo, TopologySchedule):
             am = am & self.topo.round_mask(k)
+        if self.faults is not None and self.faults.active:
+            # no per-edge payload wire here: darkness is oracle-based
+            # (edge_ok == what the LT-ADMM checksum/NAK detection
+            # produces); crashed agents additionally hold all state via
+            # GossipSolverMixin.step
+            am = am & self.faults.edge_ok(k, self._union)
 
         # ---- graph round: closed-form row update + symmetrization ----
         dist = pairwise_dist_sq(xhat, xhat_nbr)
@@ -394,15 +401,18 @@ class DadaSolver(GossipSolverMixin):
 # ---------------------------------------------------------------------------
 
 DADA_PARAMS = ("lr", "mu", "lambda_g", "graph_every", "degree_cap",
-               "batch_size", "compressor", "packed")
+               "batch_size", "compressor", "packed", "faults")
 
 
 def make_dada(graph, exchange, grad_est, **kw):
+    from repro.core import faults as faults_mod
+
     comp = kw.pop("compressor", None)
     if isinstance(comp, str):
         comp = compression.get_compressor(comp)
+    fp = faults_mod.get_faults(kw.pop("faults", None))
     kw = {k: compression.coerce_param(v) for k, v in kw.items()}
     return DadaSolver(
         topo=graph, exchange=exchange, grad_est=grad_est,
-        compressor=comp, **kw,
+        compressor=comp, faults=fp, **kw,
     )

@@ -176,6 +176,22 @@ class TopologySchedule:
         return jnp.asarray(self.node_masks)[jnp.mod(k, self.period)]
 
 
+def static_schedule(topo) -> TopologySchedule:
+    """Wrap a static ``Topology`` as a period-1 schedule (every real edge
+    active every round).  Identity for inputs that are already
+    schedules.  This is the carrier the fault plane rides on: fault
+    detection refines the per-round activity mask, so faulty static
+    graphs route through the schedule step path (per-edge EF mirrors +
+    async-ADMM holds) instead of the mask-free static path."""
+    if isinstance(topo, TopologySchedule):
+        return topo
+    masks = np.asarray(topo.slot_mask())[None].copy()
+    return TopologySchedule(
+        union=topo, masks=masks,
+        name=f"static:{getattr(topo, 'name', type(topo).__name__)}",
+    )
+
+
 def validate_schedule(sched: TopologySchedule) -> None:
     """Structural invariants on top of ``topology.validate(union)``."""
     validate(sched.union)

@@ -39,9 +39,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.common.trees import tree_consensus_error, tree_consensus_mean
-from repro.core import admm, baselines, compression, graphlearn, packing
+from repro.core import admm, baselines, compression, faults, graphlearn, \
+    packing
 from repro.core.admm import LTADMMConfig
-from repro.core.schedule import TopologySchedule
+from repro.core.schedule import TopologySchedule, static_schedule
 from repro.core.topology import Exchange
 
 
@@ -284,11 +285,15 @@ def parse_solver_spec(spec: str):
                 f"solver {entry.name!r} got unknown param {item!r} "
                 f"(accepted: {sorted(entry.params)})"
             )
-    # nested compressor specs validate at parse time, so a misspelled
-    # param ("compressor=qbit:bit=4") fails here naming qbit's valid
-    # params — not as a construction error deep inside the factory
+    # nested specs validate at parse time, so a misspelled param
+    # ("compressor=qbit:bit=4", "faults=faults:drp=0.1") fails here
+    # naming the valid params — not as a construction error deep
+    # inside the factory
     for k in entry.nested & kw.keys():
-        compression.validate_spec(kw[k])
+        if k == "faults":
+            faults.validate_spec(kw[k])
+        else:
+            compression.validate_spec(kw[k])
     return entry, kw
 
 
@@ -328,6 +333,7 @@ _LTADMM_CFG_FIELDS = tuple(
 def _make_ltadmm(graph, exchange, grad_est, **kw):
     comp = kw.pop("compressor", None)
     packed = compression.coerce_param(kw.pop("packed", True))
+    fp = faults.get_faults(kw.pop("faults", None))
     if comp is not None:
         comp = _as_compressor(comp)
         kw.setdefault("compressor_x", comp)
@@ -336,8 +342,17 @@ def _make_ltadmm(graph, exchange, grad_est, **kw):
         if key in kw:
             kw[key] = _as_compressor(kw[key])
     cfg = LTADMMConfig(
-        **{k: compression.coerce_param(v) for k, v in kw.items()}
+        **{k: compression.coerce_param(v) for k, v in kw.items()},
+        faults=fp,
     )
+    if fp is not None:
+        if not packed:
+            raise ValueError(
+                "ltadmm faults= requires packed=true (the sealed wire "
+                "format lives on the packed plane)")
+        # faults need the per-edge EF/hold machinery of the schedule
+        # path; identity on inputs that are already schedules
+        graph = static_schedule(graph)
     return LTADMMSolver(
         graph=graph, exchange=exchange, grad_est=grad_est, cfg=cfg,
         packed=packed,
@@ -349,7 +364,7 @@ register_solver(
     _make_ltadmm,
     params=_LTADMM_CFG_FIELDS + ("compressor", "compressor_x",
                                  "compressor_z", "packed"),
-    nested=("compressor", "compressor_x", "compressor_z"),
+    nested=("compressor", "compressor_x", "compressor_z", "faults"),
     estimator="vr",
     doc="LT-ADMM-CC (paper Alg. 1): local VR training + compressed "
         "x/z exchanges; exact convergence (Theorem 1); packed=false "
@@ -374,6 +389,8 @@ def _baseline_factory(cls):
         del exchange  # baselines gossip through a dense mixing matrix
         if "compressor" in kw:
             kw["compressor"] = _as_compressor(kw["compressor"])
+        if "faults" in kw:
+            kw["faults"] = faults.get_faults(kw["faults"])
         kw = {k: compression.coerce_param(v) for k, v in kw.items()}
         return cls(topo=graph, grad_est=grad_est, **kw)
 
@@ -389,7 +406,8 @@ for _name, _cls in baselines.ALL_BASELINES.items():
         _name,
         _baseline_factory(_cls),
         params=_fields,
-        nested=("compressor",) if "compressor" in _fields else (),
+        nested=tuple(k for k in ("compressor", "faults")
+                     if k in _fields),
         estimator="sgd",
         doc=_BASELINE_DOCS.get(_name, ""),
     )
@@ -401,7 +419,7 @@ register_solver(
     "dada",
     graphlearn.make_dada,
     params=graphlearn.DADA_PARAMS,
-    nested=("compressor",),
+    nested=("compressor", "faults"),
     estimator="sgd",
     doc="Dada: jointly learned personalized models + sparse "
         "collaboration graph (alternating model/graph rounds; "

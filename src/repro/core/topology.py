@@ -478,11 +478,18 @@ class Exchange:
     Masked slots deliver the agent's OWN message (a self-loop) on both
     implementations, so the two paths are bit-identical everywhere; the
     algorithm layer masks those slots out of the math.
+
+    ``faults`` (a ``core.faults.FaultPlane``, duck-typed — this module
+    never imports it) arms the slot-batched paths: when set AND a
+    ``round_index`` is passed, routed *sealed* payloads get seeded
+    faults injected post-routing via ``faults.inject``.  Calls without
+    ``round_index`` (e.g. the NAK control plane) stay reliable.
     """
 
     topo: Any
     axis: str | None = None
     mesh: Any = None  # jax.sharding.Mesh when axis is not None
+    faults: Any = None  # core.faults.FaultPlane | None
 
     def gather_from_neighbors(self, per_agent_tree):
         """Every agent broadcasts one message; returns tuple over slots of
@@ -516,16 +523,17 @@ class Exchange:
     # one gather for all slots and the mesh path runs its per-slot
     # ppermutes inside a single shard_map (one program, S collectives).
 
-    def gather_batched(self, per_agent_tree):
+    def gather_batched(self, per_agent_tree, round_index=None):
         """Broadcast exchange, slot-batched: leaves ``[A, ...]`` in,
         ``[A, S, ...]`` out with ``out[i, s] = in[neighbor_table()[i, s]]``
         (own message on masked slots, as always)."""
         nbr = self.topo.neighbor_table()
         if self.axis is None:
             idx = jnp.asarray(nbr)  # [A, S]
-            return jax.tree.map(
+            out = jax.tree.map(
                 lambda x: jnp.take(x, idx, axis=0), per_agent_tree
             )
+            return self._maybe_inject(out, round_index)
         A, S = self.topo.n_agents, self.topo.n_slots
         perms = [
             [(int(nbr[i, s]), i) for i in range(A)] for s in range(S)
@@ -537,9 +545,10 @@ class Exchange:
                 lambda *xs: jnp.stack(xs, axis=1), *outs
             )
 
-        return _shard_map(body, self.mesh, self.axis)(per_agent_tree)
+        out = _shard_map(body, self.mesh, self.axis)(per_agent_tree)
+        return self._maybe_inject(out, round_index)
 
-    def exchange_batched(self, edge_tree):
+    def exchange_batched(self, edge_tree, round_index=None):
         """Edge-directed exchange, slot-batched: leaves ``[A, S, ...]`` in
         and out, ``out[i, s] = in[neighbor_table()[i, s],
         reverse_slot[s]]`` — every slot's swap in ONE gather on the host
@@ -556,7 +565,8 @@ class Exchange:
                 x2 = jnp.reshape(x, (A * S,) + x.shape[2:])
                 return jnp.take(x2, flat_idx, axis=0)
 
-            return jax.tree.map(route, edge_tree)
+            return self._maybe_inject(
+                jax.tree.map(route, edge_tree), round_index)
         perms = [
             [(int(nbr[i, s]), i) for i in range(A)] for s in range(S)
         ]
@@ -574,7 +584,13 @@ class Exchange:
                 lambda *xs: jnp.stack(xs, axis=1), *outs
             )
 
-        return _shard_map(body, self.mesh, self.axis)(edge_tree)
+        out = _shard_map(body, self.mesh, self.axis)(edge_tree)
+        return self._maybe_inject(out, round_index)
+
+    def _maybe_inject(self, routed, round_index):
+        if self.faults is None or round_index is None:
+            return routed
+        return self.faults.inject(routed, self.topo, round_index)
 
     def _route(self, tree, src_ids):
         """recv[i] = sent[src_ids[i]] — src_ids must be a partial

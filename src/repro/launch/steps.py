@@ -11,7 +11,9 @@ topology, is chosen by spec string.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
+import math
 import warnings
 
 import jax
@@ -203,6 +205,64 @@ def build_train(arch_def, cfg, mesh, solver_spec: str,
         edge_ps = shd.prefix_pspec(pps, aaxis, None)  # [A, S, ...]
     state_ps = solver.state_sharding(x_ps, edge_ps, P())
     return step_fn, state_ps, solver.init, solver
+
+
+class DivergenceWatchdog:
+    """Divergence detection + rollback to a last-good snapshot ring.
+
+    Host-side companion of the fault plane: after every logged chunk the
+    driver reports ``(state, metric)``; a NaN/Inf metric or a blow-up
+    beyond ``blowup x`` the best metric seen marks the window poisoned
+    and rolls the solver state back to the OLDEST snapshot in the ring
+    (the state most distant from the divergence).  Healthy states are
+    snapshotted as device-buffer COPIES, so the ring survives donation
+    of the live state by the jitted chunk runner.
+
+    Rollback does NOT rewind the round counter: the driver keeps
+    advancing rounds, so the replayed trajectory diverges from the
+    poisoned one (with deterministic per-round keys, rewinding would
+    replay the identical divergence forever).  ``max_consecutive``
+    rollbacks without an intervening healthy window raise — a watchdog
+    that cannot re-stabilize should fail loudly, not spin.
+    """
+
+    def __init__(self, depth: int = 3, blowup: float = 1e4,
+                 max_consecutive: int = 3):
+        assert depth >= 1 and blowup > 1.0, (depth, blowup)
+        self.blowup = float(blowup)
+        self.max_consecutive = max_consecutive
+        self._ring = collections.deque(maxlen=depth)
+        self._best = math.inf
+        self._consecutive = 0
+        self.rollbacks = 0
+
+    def _bad(self, m: float) -> bool:
+        if not math.isfinite(m):
+            return True
+        return (math.isfinite(self._best)
+                and m > self.blowup * max(self._best, 1e-12))
+
+    def observe(self, state, metric):
+        """-> ``(state, rolled_back)``: the input state (now snapshotted)
+        when healthy, else the last-good rollback state."""
+        m = float(metric)
+        if not self._bad(m):
+            self._best = min(self._best, m)
+            self._ring.append(jax.tree.map(jnp.array, state))
+            self._consecutive = 0
+            return state, False
+        self.rollbacks += 1
+        self._consecutive += 1
+        if not self._ring:
+            raise RuntimeError(
+                f"divergence (metric={m}) before any healthy snapshot")
+        if self._consecutive > self.max_consecutive:
+            raise RuntimeError(
+                f"divergence watchdog: {self._consecutive} consecutive "
+                f"rollbacks without re-stabilizing (metric={m})")
+        # copy: the caller's jitted chunk donates its input, and the ring
+        # entry must survive for a possible second rollback
+        return jax.tree.map(jnp.array, self._ring[0]), True
 
 
 def abstract_train_state(arch_def, cfg, solver):

@@ -32,7 +32,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.checkpoint import save_checkpoint
+from repro.checkpoint import load_checkpoint, save_checkpoint
 from repro.configs import ARCHS
 from repro.core import vr
 from repro.core.schedule import SCHEDULES, TopologySchedule, build_graph
@@ -44,7 +44,12 @@ from repro.core.solver import (
 )
 from repro.core.topology import TOPOLOGIES
 from repro.data import SyntheticLMDataset
-from repro.launch.steps import TrainRecipe, model_loss, model_specs
+from repro.launch.steps import (
+    DivergenceWatchdog,
+    TrainRecipe,
+    model_loss,
+    model_specs,
+)
 from repro.models.common import init_params, param_count
 
 
@@ -83,8 +88,11 @@ def build(args):
         if entry.estimator == "vr"
         else vr.PlainSgd(batch_grad=grad)
     )
-    solver = make_solver(args.solver, graph, ex, est,
-                         defaults=recipe.solver_defaults(entry.name))
+    defaults = recipe.solver_defaults(entry.name)
+    if getattr(args, "faults", None):
+        # every registered solver accepts a faults= param; spec params win
+        defaults["faults"] = args.faults
+    solver = make_solver(args.solver, graph, ex, est, defaults=defaults)
     return arch, cfg, solver, loss
 
 
@@ -120,11 +128,30 @@ def main():
     ap.add_argument("--fraction", type=float, default=0.25)
     ap.add_argument("--heterogeneity", type=float, default=0.7)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--faults", default=None,
+                    help="fault-injection spec, e.g. "
+                         "faults:drop=0.05,corrupt=1e-3,crash=0.01,seed=0 "
+                         "— seeded message drops / payload bit-flips / "
+                         "stale rounds / crash-restarts at the exchange "
+                         "boundary (spec faults= param wins)")
     ap.add_argument("--checkpoint", default=None)
+    ap.add_argument("--checkpoint-every", type=int, default=0,
+                    help="with --checkpoint PATH: every N rounds also "
+                         "write the FULL solver state to PATH.state "
+                         "(atomic; resumable via --resume PATH.state)")
+    ap.add_argument("--resume", default=None,
+                    help="checkpoint dir written by --checkpoint-every; "
+                         "continues bitwise-exactly from the saved round")
+    ap.add_argument("--watchdog-blowup", type=float, default=1e4,
+                    help="divergence watchdog: roll back to the last-good "
+                         "state when mean loss is NaN/Inf or exceeds "
+                         "blowup x the best seen (0 disables)")
     ap.add_argument("--log-every", type=int, default=1,
                     help="rounds per jitted scan chunk (one host dispatch "
                          "and one metrics eval per chunk; raise for speed)")
     args = ap.parse_args()
+    if args.checkpoint_every and not args.checkpoint:
+        ap.error("--checkpoint-every requires --checkpoint PATH")
 
     arch, cfg, solver, loss = build(args)
     ds = SyntheticLMDataset(
@@ -170,6 +197,17 @@ def main():
     # un-alias once up front — every later chunk gets distinct buffers
     # straight from XLA.
     state = jax.tree.map(jnp.array, solver.init(x0))
+    done = 0
+    if args.resume:
+        # crash-exact resume: all persistent solver state lives in the
+        # state tree and round keys are pure functions of the round
+        # index, so restoring the tree and the round counter continues
+        # the interrupted trajectory bitwise-identically.
+        template = jax.eval_shape(solver.init, x0)
+        restored, manifest = load_checkpoint(args.resume, like_tree=template)
+        state = jax.tree.map(jnp.array, restored)
+        done = int(manifest["step"])
+        print(f"# resumed from {args.resume} at round {done}")
 
     # One jitted dispatch per LOG POINT, not per round: scan over the
     # rounds of a chunk, with the solver state donated so XLA reuses the
@@ -190,20 +228,38 @@ def main():
         ls = jax.vmap(lambda d: loss(pbar, {"tokens": d}))(data["tokens"])
         return float(jnp.mean(ls))
 
+    watchdog = (DivergenceWatchdog(blowup=args.watchdog_blowup)
+                if args.watchdog_blowup > 0 else None)
     t_start = time.time()
-    done = 0
     while done < args.rounds:
         n = min(args.log_every, args.rounds - done)
         state = run_chunk(state, jnp.int32(done), n)
         done += n
+        ml = mean_loss(state)
+        if watchdog is not None:
+            state, rolled_back = watchdog.observe(state, ml)
+            if rolled_back:
+                # skip-ahead: restore last-good state but keep advancing
+                # rounds — rewinding would deterministically replay the
+                # same divergence
+                print(json.dumps({
+                    "round": done - 1, "watchdog": "rollback",
+                    "mean_loss": ml, "rollbacks": watchdog.rollbacks,
+                }))
+                continue
         print(json.dumps({
             "round": done - 1,
-            "mean_loss": round(mean_loss(state), 4),
+            "mean_loss": round(ml, 4),
             "consensus_err": float(
                 consensus_error(solver.consensus_params(state))
             ),
             "wall_s": round(time.time() - t_start, 1),
         }))
+        if (args.checkpoint_every and done < args.rounds
+                and done % args.checkpoint_every == 0):
+            save_checkpoint(args.checkpoint + ".state", state, step=done,
+                            extra={"arch": args.arch, "smoke": args.smoke,
+                                   "solver": args.solver})
     if args.checkpoint:
         x = solver.consensus_params(state)
         pbar = jax.tree.map(lambda t: jnp.mean(t, axis=0), x)

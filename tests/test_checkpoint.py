@@ -1,8 +1,12 @@
+import os
+
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.checkpoint import load_checkpoint, save_checkpoint
+from repro.checkpoint.store import CheckpointCorruptError
 
 
 def test_roundtrip(tmp_path):
@@ -25,3 +29,109 @@ def test_manifest_lists_all_leaves(tmp_path):
     raw, manifest = load_checkpoint(str(tmp_path / "c"))
     assert sorted(manifest["keys"]) == ["a", "nested/b"]
     assert manifest["shapes"]["nested/b"] == [3]
+
+
+# ---------------------------------------------------------------------------
+# Corruption detection + atomic overwrite
+# ---------------------------------------------------------------------------
+
+
+def _ckpt(tmp_path, step=0):
+    path = str(tmp_path / "c")
+    save_checkpoint(path, {"a": jnp.arange(4.0)}, step=step)
+    return path
+
+
+def test_missing_checkpoint_raises(tmp_path):
+    with pytest.raises(CheckpointCorruptError, match="missing manifest"):
+        load_checkpoint(str(tmp_path / "nope"))
+
+
+def test_truncated_arrays_raise(tmp_path):
+    path = _ckpt(tmp_path)
+    apath = os.path.join(path, "arrays.npz")
+    with open(apath, "r+b") as f:
+        f.truncate(os.path.getsize(apath) // 2)
+    with pytest.raises(CheckpointCorruptError, match="truncated arrays"):
+        load_checkpoint(path)
+
+
+def test_truncated_manifest_raises(tmp_path):
+    path = _ckpt(tmp_path)
+    mpath = os.path.join(path, "manifest.json")
+    with open(mpath, "r+") as f:
+        f.truncate(os.path.getsize(mpath) // 2)
+    with pytest.raises(CheckpointCorruptError, match="truncated manifest"):
+        load_checkpoint(path)
+
+
+def test_missing_leaf_for_template_raises(tmp_path):
+    path = _ckpt(tmp_path)
+    with pytest.raises(CheckpointCorruptError, match="lacks leaf"):
+        load_checkpoint(path, like_tree={"a": jnp.zeros(4),
+                                         "extra": jnp.zeros(1)})
+
+
+def test_overwrite_is_atomic_replacement(tmp_path):
+    """Saving over an existing checkpoint swaps the whole directory —
+    the result is exactly the new save, with no stale sibling files."""
+    path = _ckpt(tmp_path, step=1)
+    save_checkpoint(path, {"a": jnp.full((4,), 9.0)}, step=2)
+    restored, manifest = load_checkpoint(path, {"a": jnp.zeros(4)})
+    assert manifest["step"] == 2
+    np.testing.assert_array_equal(np.asarray(restored["a"]),
+                                  np.full((4,), 9.0))
+    assert sorted(os.listdir(path)) == ["arrays.npz", "manifest.json"]
+    # no leftover temp/doomed siblings in the parent either
+    assert os.listdir(str(tmp_path)) == ["c"]
+
+
+# ---------------------------------------------------------------------------
+# Crash-exact resume: every registered solver
+# ---------------------------------------------------------------------------
+
+
+def _resume_case(name):
+    from test_solver import DATA, EX, PROB, ROUNDTRIP_SPECS, TOPO, _est_for
+    from repro.core.solver import make_solver
+
+    spec = ROUNDTRIP_SPECS[name]
+    s = make_solver(spec, TOPO, EX, _est_for(spec))
+    x0 = jnp.zeros((PROB.n_agents, PROB.n))
+    step = jax.jit(s.step)
+
+    def advance(st, first, n):
+        for r in range(first, first + n):
+            st = step(st, DATA, jax.random.key(1000 + r))
+        return st
+
+    return s, x0, advance
+
+
+@pytest.mark.parametrize("name", ["ltadmm", "dsgd", "choco", "lead",
+                                  "cold", "cedas", "dpdc", "dada"])
+def test_resume_is_bitwise_exact_for_every_solver(tmp_path, name):
+    """Kill-mid-run + resume == uninterrupted run, bitwise, for every
+    registered solver: round keys are pure functions of the round index
+    and ALL persistent solver state lives in the state tree, so a
+    checkpoint round-trip (f32/int -> npz -> restore onto the abstract
+    template) continues the exact trajectory."""
+    s, x0, advance = _resume_case(name)
+    k1, k2 = 3, 2
+
+    uninterrupted = advance(s.init(x0), 0, k1 + k2)
+
+    st = advance(s.init(x0), 0, k1)
+    path = str(tmp_path / "mid")
+    save_checkpoint(path, st, step=k1)
+    template = jax.eval_shape(s.init, x0)
+    restored, manifest = load_checkpoint(path, like_tree=template)
+    assert manifest["step"] == k1
+    resumed = advance(jax.tree.map(jnp.asarray, restored), k1, k2)
+
+    flat_a = jax.tree.leaves(uninterrupted)
+    flat_b = jax.tree.leaves(resumed)
+    assert len(flat_a) == len(flat_b)
+    for a, b in zip(flat_a, flat_b):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
