@@ -98,6 +98,26 @@ def main() -> None:
               f"{b.get('warm_wall_s')!s:>6s}->{r['warm_wall_s']!s:<6s} "
               f"{r['final_gradnorm_sq']:10.1e}")
 
+    # informational: measured in-trace counter deltas (obs.telemetry).
+    # Wire bytes are ALSO pinned bitwise to the analytic model in
+    # tests/test_obs.py, so a drift here that is not an intended
+    # accounting change should already be red in the test lane.
+    tel_rows = [r for r in pr["results"] if r.get("telemetry")]
+    if tel_rows:
+        print(f"\n{'telemetry (measured)':38s} {'tx_bytes_max_agent':>22s} "
+              f"{'drops':>12s} {'naks':>12s}")
+        for r in tel_rows:
+            t = r["telemetry"]
+            bt = (base_by_name.get(r["name"], {}).get("telemetry")
+                  or {})
+
+            def _d(key):
+                return f"{bt.get(key)!s:>9s}->{t.get(key)!s:<9s}"
+
+            print(f"{r['name']:38s} {_d('tx_bytes_max_agent'):>22s} "
+                  f"{_d('rx_dropped_total'):>12s} "
+                  f"{_d('naks_total'):>12s}")
+
     if pr.get("kernels"):
         # informational only: kernel wall times are interpret-mode on CI
         # CPU runners and far too noisy to gate, but the trajectory is

@@ -1,8 +1,6 @@
 """Shared helpers for the benchmark harness."""
 from __future__ import annotations
 
-import time
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -11,6 +9,7 @@ from repro.core import vr
 from repro.core.costmodel import CostModel
 from repro.core.schedule import build_graph
 from repro.core.solver import make_solver
+from repro.obs.trace import timeit  # noqa: F401  (shared micro-bench helper)
 from repro.problems.logistic import LogisticProblem
 
 
@@ -69,9 +68,12 @@ def convergence_sweep(specs, rounds, label, print_rows=True):
     return rows
 
 
-def run_solver(prob, data, solver, rounds, metric_every=10, seed=12345):
+def run_solver(prob, data, solver, rounds, metric_every=10, seed=12345,
+               return_state=False):
     """Scan-driven run of ANY ``Solver``; returns (rounds_idx,
-    gradnorm_sq) arrays sampled every ``metric_every`` rounds.
+    gradnorm_sq) arrays sampled every ``metric_every`` rounds — plus the
+    final solver state when ``return_state=True`` (so a telemetry-
+    wrapped solver's accumulated counters can be read off afterwards).
 
     The scan is chunked at the sample points, so the gradient-norm
     metric is computed ONLY at rounds 0, metric_every, 2*metric_every,
@@ -107,13 +109,6 @@ def run_solver(prob, data, solver, rounds, metric_every=10, seed=12345):
         st, _ = jax.lax.scan(
             one_round, st, n_chunks * me + 1 + jnp.arange(rem - 1)
         )
+    if return_state:
+        return idx, gns, st
     return idx, gns
-
-
-def timeit(fn, *args, iters=5):
-    fn(*args)  # compile
-    t0 = time.perf_counter()
-    for _ in range(iters):
-        out = fn(*args)
-    jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / iters * 1e6  # us

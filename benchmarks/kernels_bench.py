@@ -11,7 +11,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import timeit
+from repro.obs.trace import timeit
 from repro.kernels import prng
 from repro.kernels.quantize import ops as q_ops
 from repro.kernels.sparse_gather import ops as sg_ops

@@ -7,12 +7,17 @@ Run:  PYTHONPATH=src python -m benchmarks.run
 ``--perf-smoke OUT.json`` runs a tiny fixed-seed recipe instead and
 writes a machine-readable BENCH JSON (wall time, rounds-to-tolerance,
 wire bytes) — the CI perf-smoke lane uploads it as ``BENCH_PR.json`` so
-the repo accumulates a performance trajectory across PRs.
+the repo accumulates a performance trajectory across PRs.  The smoke
+runs with the telemetry plane ENABLED (``repro.obs.telemetry``), so the
+wall-time gate also covers the counter overhead, and each row carries
+the measured counters; wall-clock spans land in a Chrome-trace JSONL
+next to the BENCH JSON (``<out>.trace.jsonl``).
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import platform
 import sys
 import time
@@ -40,13 +45,16 @@ def perf_smoke(out_path: str) -> None:
     from benchmarks.common import make_problem, run_solver
     from repro.core import vr
     from repro.core.solver import make_solver
+    from repro.obs import telemetry, trace
 
+    tracer = trace.Tracer(os.path.splitext(out_path)[0] + ".trace.jsonl")
     results = []
     for spec in PERF_SMOKE_SPECS:
         prob, data, graph, ex = make_problem(seed=0, topology=spec)
         saga = vr.SagaTable(sample_grad=prob.sample_grad, m=prob.m)
-        solver = make_solver("ltadmm:compressor=qbit:bits=8", graph, ex,
-                             saga)
+        solver = telemetry.with_telemetry(
+            make_solver("ltadmm:compressor=qbit:bits=8", graph, ex, saga)
+        )
 
         # jit once so the second call measures steady-state runtime, not
         # re-tracing (run_solver builds a fresh scan closure per call);
@@ -54,19 +62,21 @@ def perf_smoke(out_path: str) -> None:
         # workload away
         runner = jax.jit(
             lambda d: run_solver(prob, d, solver, PERF_SMOKE_ROUNDS,
-                                 metric_every=10)
+                                 metric_every=10, return_state=True)
         )
 
-        def once():
-            t0 = time.perf_counter()
-            idx, gns = runner(data)
-            jax.block_until_ready(gns)
-            return time.perf_counter() - t0, idx, gns
+        def once(label):
+            with tracer.span(label, spec=spec):
+                t0 = time.perf_counter()
+                idx, gns, st = runner(data)
+                jax.block_until_ready(gns)
+                return time.perf_counter() - t0, idx, gns, st
 
-        cold_s, _, _ = once()
-        warm_s, idx, gns = once()
+        cold_s, _, _, _ = once("cold")
+        warm_s, idx, gns, st = once("warm")
         g, i = np.asarray(gns), np.asarray(idx)
         hit = np.nonzero(g <= PERF_SMOKE_TOL)[0]
+        tel = telemetry.counters(st)
         results.append({
             "name": f"admm/{graph.name}/q8+saga",
             "spec": spec,
@@ -79,6 +89,18 @@ def perf_smoke(out_path: str) -> None:
             "wire_bytes_per_round": solver.wire_bytes(
                 {"x": np.zeros((prob.n,), np.float32)}
             ),
+            # measured (in-trace) counters over the whole run: busiest
+            # agent's bytes, totals for the rest — the regression gate
+            # treats these as informational deltas
+            "telemetry": {
+                "tx_bytes_max_agent": int(np.max(tel["tx_bytes"])),
+                "tx_msgs_total": int(np.sum(tel["tx_msgs"])),
+                "rx_dropped_total": int(np.sum(tel["rx_dropped"])),
+                "naks_total": int(np.sum(tel["naks"])),
+                "participations_total": int(
+                    np.sum(tel["participations"])),
+                "rounds": int(tel["rounds"]),
+            },
         })
     # learned-graph lane: the dada solver converges in a different
     # metric (personalized stationarity, not consensus gradient norm) —
@@ -93,13 +115,17 @@ def perf_smoke(out_path: str) -> None:
     from benchmarks import fault_sweep
 
     results.append(fault_sweep.smoke_row())
-    kernel_rows = kernels_bench.run(print_rows=False, fast=True)
+    with tracer.span("kernels"):
+        kernel_rows = kernels_bench.run(print_rows=False, fast=True)
+    tracer.close()
     payload = {
         "schema": 1,
         "bench": "perf-smoke",
         "seed": 0,
         "jax": jax.__version__,
         "python": platform.python_version(),
+        "backend": jax.default_backend(),
+        "device": jax.devices()[0].device_kind,
         "results": results,
         "kernels": [
             {"name": name, "us_per_call": round(us, 1), "derived": derived}

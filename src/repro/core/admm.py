@@ -60,6 +60,7 @@ from repro.common.trees import (
 )
 from repro.core import compression
 from repro.core.topology import Exchange, Topology
+from repro.obs import telemetry
 
 
 @dataclasses.dataclass(frozen=True)
@@ -252,6 +253,28 @@ def _select_agents(node_mask, on_tree, off_tree):
     return _select_slot(node_mask, on_tree, off_tree)
 
 
+def _emit_round_telemetry(cfg, vr_est, data, deg, per_msg, node_k, *, A,
+                          fault_counters=None):
+    """Telemetry tap shared by the four round implementations: charge
+    each agent its active-degree messages (``per_msg`` measured bytes
+    for the x+z pair), its participation, and the local phase's
+    grad-eval recipe.  Only reached when a ``with_telemetry`` wrapper is
+    tracing (``telemetry.active()``) — plain uint32 adds, no host sync."""
+    part = (jnp.ones((A,), jnp.uint32) if node_k is None
+            else node_k.astype(jnp.uint32))
+    m = jax.tree.leaves(data)[0].shape[1]
+    evals = telemetry.local_phase_evals(vr_est, m, cfg.tau, cfg.batch_size)
+    counters = dict(
+        tx_bytes=deg * jnp.uint32(per_msg),
+        tx_msgs=deg * jnp.uint32(2),
+        participations=part,
+        grad_evals=jnp.uint32(evals) * part,
+    )
+    if fault_counters:
+        counters.update(fault_counters)
+    telemetry.emit(**counters)
+
+
 def step(
     cfg: LTADMMConfig,
     topo: Topology,
@@ -354,6 +377,12 @@ def _step_tree(
     # ---- the only cross-agent communication --------------------------------
     recv_x = exchange.gather_from_neighbors(m_x)
     recv_z = exchange.exchange_edges(tuple(m_z))
+
+    if telemetry.active() and m_z:
+        deg = jnp.asarray(np.asarray(slot_mask).sum(axis=1), jnp.uint32)
+        per_msg = (telemetry.payload_nbytes(m_x, nd=1)
+                   + telemetry.payload_nbytes(m_z[0], nd=1))
+        _emit_round_telemetry(cfg, vr_est, data, deg, per_msg, None, A=A)
 
     # ---- 7. receiver-side mirrors ------------------------------------------
     u_nbr_new = (
@@ -492,6 +521,16 @@ def _step_packed(
     # ---- the only cross-agent communication -------------------------------
     recv_x = exchange.gather_batched(m_x)  # payload leaves [A, S, ...]
     recv_z = exchange.exchange_batched(m_z)
+
+    if telemetry.active():
+        # one x-message to every neighbor + one z-message per edge;
+        # masked union slots move self-addressed placeholders and are
+        # not charged, matching the analytic wire accounting
+        deg = jnp.asarray(np.asarray(topo.slot_mask()).sum(axis=1),
+                          jnp.uint32)
+        per_msg = (telemetry.payload_nbytes(m_x, nd=1)
+                   + telemetry.payload_nbytes(m_z, nd=2))
+        _emit_round_telemetry(cfg, vr_est, data, deg, per_msg, None, A=A)
 
     # ---- 7. receiver-side mirrors -----------------------------------------
     u_nbr_new = (
@@ -702,6 +741,12 @@ def _step_schedule_tree(
     recv_x = exchange.exchange_edges(tuple(m_x))
     recv_z = exchange.exchange_edges(tuple(m_z))
 
+    if telemetry.active() and m_z:
+        deg = jnp.sum(mask_k, axis=1, dtype=jnp.uint32)
+        per_msg = (telemetry.payload_nbytes(m_x[0], nd=1)
+                   + telemetry.payload_nbytes(m_z[0], nd=1))
+        _emit_round_telemetry(cfg, vr_est, data, deg, per_msg, node_k, A=A)
+
     # ---- 7. receiver-side mirrors, gated by the same mask -----------------
     x_hat_nbr_new, u_nbr_new, z_hat_nbr = [], [], []
     for sl in range(topo.n_slots):
@@ -828,6 +873,8 @@ def _step_schedule_packed(
     z_hat_own = state.s + rec_z
 
     # ---- the only cross-agent communication (all slots, every round) ------
+    tx_x, tx_z = m_x, m_z  # what actually hits the wire (sealed if faulted)
+    fault_counters = None
     if fp is None:
         recv_x = exchange.exchange_batched(m_x)
         recv_z = exchange.exchange_batched(m_z)
@@ -836,22 +883,42 @@ def _step_schedule_packed(
         # stale/poisoned round tag marks the slot not-ok; both payloads
         # of a round share the link, so one ok mask covers x and z
         armed = dataclasses.replace(exchange, faults=fp)
-        recv_x, ok_x = compression.verify_plane(
-            armed.exchange_batched(
-                compression.seal_plane(m_x, state.k, nd=2),
-                round_index=state.k),
-            state.k)
-        recv_z, ok_z = compression.verify_plane(
-            armed.exchange_batched(
-                compression.seal_plane(m_z, state.k, nd=2),
-                round_index=state.k),
-            state.k)
+        tx_x = compression.seal_plane(m_x, state.k, nd=2)
+        tx_z = compression.seal_plane(m_z, state.k, nd=2)
+        recv_x, ok_x, crc_x, tag_x = compression.verify_plane_kinds(
+            armed.exchange_batched(tx_x, round_index=state.k), state.k)
+        recv_z, ok_z, crc_z, tag_z = compression.verify_plane_kinds(
+            armed.exchange_batched(tx_z, round_index=state.k), state.k)
         ok = ok_x & ok_z & alive[:, None]
         # NAK symmetrization over the (assumed reliable) control plane:
         # an edge advances only when BOTH endpoints received cleanly,
         # else duals + EF mirrors hold on both sides in lockstep
         edge_ok = ok & exchange.exchange_batched(ok)
         act = act & edge_ok[:, :, None]
+        if telemetry.active():
+            # receiver-side detection verdicts, counted per message on
+            # schedule-active slots (dark union slots carry placeholders)
+            sched_act = sched.round_mask(state.k)
+
+            def _per_agent(mask):
+                return jnp.sum(sched_act & mask, axis=1, dtype=jnp.uint32)
+
+            fault_counters = {
+                "rx_crc_rejects": _per_agent(~crc_x) + _per_agent(~crc_z),
+                "rx_tag_rejects": (_per_agent(crc_x & ~tag_x)
+                                   + _per_agent(crc_z & ~tag_z)),
+                "rx_dropped": _per_agent(~ok_x) + _per_agent(~ok_z),
+                "naks": _per_agent(ok & ~edge_ok),
+            }
+    if telemetry.active():
+        # transmission is charged on the SCHEDULE's active edges (a
+        # dropped message was still sent); faults only add rx counters
+        sched_act = sched.round_mask(state.k)
+        deg = jnp.sum(sched_act, axis=1, dtype=jnp.uint32)
+        per_msg = (telemetry.payload_nbytes(tx_x, nd=2)
+                   + telemetry.payload_nbytes(tx_z, nd=2))
+        _emit_round_telemetry(cfg, vr_est, data, deg, per_msg, node_k, A=A,
+                              fault_counters=fault_counters)
     x_hat_edge_new = jnp.where(act, u_adv + rec_x, xh)
     u_edge_new = (
         None if cfg.lean else jnp.where(act, u_adv, state.u_edge)

@@ -46,6 +46,7 @@ from repro.common.trees import tree_map, tree_sub, tree_zeros_like
 from repro.core import compression, packing, vr
 from repro.core.schedule import TopologySchedule, metropolis_schedule
 from repro.core.topology import Topology, metropolis_weights
+from repro.obs import telemetry
 
 
 def _metropolis_online(union, act):
@@ -219,6 +220,43 @@ class GossipSolverMixin:
         return (n_grad * cost_model.t_grad
                 + self.comm_rounds * cost_model.t_comm)
 
+    # ---- telemetry tap ----------------------------------------------------
+
+    def _emit_telemetry(self, state, data, k, node_mask):
+        """Telemetry contribution of one iteration (only reached while a
+        ``with_telemetry`` wrapper is tracing): one compressed message
+        per active incident edge per communication round, with bytes
+        measured from the payload the wire compressor actually emits;
+        oracle-dark faulted edges count as dropped receives.  Overridden
+        by the learned-graph solver for capped-degree accounting."""
+        topo = self.topo
+        if isinstance(topo, TopologySchedule):
+            act, union = topo.round_mask(k), topo.union
+        else:
+            act, union = jnp.asarray(topo.slot_mask()), topo
+        deg = jnp.sum(act, axis=1, dtype=jnp.uint32)
+        per_msg = telemetry.message_nbytes(
+            self._wire_compressor(), _like(state["x"])
+        )
+        A = jax.tree.leaves(state["x"])[0].shape[0]
+        part = (jnp.ones((A,), jnp.uint32) if node_mask is None
+                else node_mask.astype(jnp.uint32))
+        m = jax.tree.leaves(data)[0].shape[1]
+        evals = telemetry.round_grad_evals(self.grad_est, m,
+                                           self.batch_size)
+        counters = dict(
+            tx_bytes=deg * jnp.uint32(self.comm_rounds * per_msg),
+            tx_msgs=deg * jnp.uint32(self.comm_rounds),
+            participations=part,
+            grad_evals=jnp.uint32(evals) * part,
+        )
+        fp = getattr(self, "faults", None)
+        if fp is not None and fp.active:
+            dark = act & ~fp.edge_ok(k, union)
+            counters["rx_dropped"] = jnp.sum(dark, axis=1,
+                                             dtype=jnp.uint32)
+        telemetry.emit(**counters)
+
     # ---- sharding / lowering hooks ----------------------------------------
 
     def abstract_state(self, x_sds):
@@ -284,6 +322,8 @@ class GossipSolverMixin:
                 )
                 for f in self.state_fields
             }
+        if telemetry.active():
+            self._emit_telemetry(state, data, k, nm)
         st["k"] = k + 1
         return st
 

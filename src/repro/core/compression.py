@@ -659,17 +659,30 @@ def seal_plane(payload, tag, nd: int):
     return Payload(**dict(payload), crc=csum + tag_arr, tag=tag_arr)
 
 
+def verify_plane_kinds(payload, expected_tag):
+    """Strip the seal and verdict each message with the failure KIND
+    split out: ``(data_payload, ok, crc_ok, tag_ok)``, all verdicts
+    [lead-shaped] bool.  ``crc_ok`` fails on dropped/corrupted payloads
+    (checksum mismatch); ``tag_ok`` fails on wrong-round delivery — a
+    stale replay is checksum-consistent by construction and rejected by
+    the tag alone, which is what keeps the two observable as distinct
+    counters in the telemetry plane.  ``ok = crc_ok & tag_ok``."""
+    crc, tag = payload["crc"], payload["tag"]
+    data = Payload(**{k: v for k, v in payload.items()
+                      if k not in _SEAL_KEYS})
+    want = jnp.asarray(expected_tag).astype(jnp.uint32)
+    crc_ok = payload_checksum(data, crc.ndim) + tag == crc
+    tag_ok = tag == want
+    return data, crc_ok & tag_ok, crc_ok, tag_ok
+
+
 def verify_plane(payload, expected_tag):
     """Strip the seal and verdict each message: ``(data_payload, ok)``
     with ``ok`` [lead-shaped] True iff the checksum holds AND the round
     tag matches ``expected_tag``.  Failed messages downgrade their edge
     to dark (async-ADMM hold) — callers gate on ``ok``, never on the
     possibly-poisoned data."""
-    crc, tag = payload["crc"], payload["tag"]
-    data = Payload(**{k: v for k, v in payload.items()
-                      if k not in _SEAL_KEYS})
-    want = jnp.asarray(expected_tag).astype(jnp.uint32)
-    ok = (payload_checksum(data, crc.ndim) + tag == crc) & (tag == want)
+    data, ok, _, _ = verify_plane_kinds(payload, expected_tag)
     return data, ok
 
 

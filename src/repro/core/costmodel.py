@@ -25,7 +25,6 @@ the schedule's ``degrees()`` counts only live links of live nodes.
 from __future__ import annotations
 
 import dataclasses
-import warnings
 
 import numpy as np
 
@@ -110,27 +109,3 @@ class CostModel:
 
     def dsgd(self, tau: int) -> float:
         return tau * (self.t_grad + self._tc)
-
-    def per_iteration(self, algo: str, m: int, full_grad: bool = False):
-        """Cost of ONE iteration of a single-loop baseline.
-
-        DEPRECATED shim: the per-iteration recipe now lives on each
-        solver (``Solver.round_cost(cost_model, m)``) — this name-keyed
-        variant delegates to the registered baseline's ``comm_rounds``
-        and is kept for callers without a solver instance.  ``full_grad``
-        is honored only where the paper runs full-gradient variants
-        (COLD/DPDC), matching the historical hardcoded table.
-        """
-        warnings.warn(
-            "CostModel.per_iteration is deprecated; build the solver "
-            "and use Solver.round_cost(cost_model, m)",
-            DeprecationWarning,
-            stacklevel=2,
-        )
-        from repro.core.baselines import ALL_BASELINES
-
-        if algo not in ALL_BASELINES:
-            raise ValueError(algo)
-        n_grad = m if (full_grad and algo in ("cold", "dpdc")) else 1
-        return (n_grad * self.t_grad
-                + ALL_BASELINES[algo].comm_rounds * self.t_comm)

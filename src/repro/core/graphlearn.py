@@ -70,6 +70,7 @@ from repro.core.baselines import (
 )
 from repro.core.schedule import TopologySchedule, union_topology
 from repro.core.topology import Exchange
+from repro.obs import telemetry
 
 
 # ---------------------------------------------------------------------------
@@ -318,6 +319,47 @@ class DadaSolver(GossipSolverMixin):
             x, g, pull,
         )
         return {"x": x, "xhat": xhat, "w": w, "c": c}
+
+    # ---- telemetry tap: learned-degree accounting -------------------------
+
+    def _emit_telemetry(self, state, data, k, node_mask):
+        """Overrides the mixin tap with the learned-graph wire contract
+        (``wire_bytes(params, t)``): the model message is charged on at
+        most ``degree_cap`` live candidate edges per agent, plus one
+        ``GRAPH_MSG_BYTES`` weight scalar per charged edge on graph
+        rounds; fault darkness refines receives, never the transmission
+        charge."""
+        am = jnp.asarray(self._cand_mask())
+        if isinstance(self.topo, TopologySchedule):
+            am = am & self.topo.round_mask(k)
+        deg = jnp.minimum(
+            jnp.sum(am, axis=1), self.degree_cap
+        ).astype(jnp.uint32)
+        per_msg = telemetry.message_nbytes(
+            self._wire_compressor(), _like(state["x"])
+        )
+        do_graph = jnp.equal(
+            jnp.mod(k, self.graph_every), 0
+        ).astype(jnp.uint32)
+        A = jax.tree.leaves(state["x"])[0].shape[0]
+        part = (jnp.ones((A,), jnp.uint32) if node_mask is None
+                else node_mask.astype(jnp.uint32))
+        m = jax.tree.leaves(data)[0].shape[1]
+        evals = telemetry.round_grad_evals(self.grad_est, m,
+                                           self.batch_size)
+        counters = dict(
+            tx_bytes=deg * (jnp.uint32(per_msg)
+                            + do_graph * jnp.uint32(self.GRAPH_MSG_BYTES)),
+            tx_msgs=deg * (jnp.uint32(1) + do_graph),
+            participations=part,
+            grad_evals=jnp.uint32(evals) * part,
+            graph_rounds=do_graph,
+        )
+        if self.faults is not None and self.faults.active:
+            dark = am & ~self.faults.edge_ok(k, self._union)
+            counters["rx_dropped"] = jnp.sum(dark, axis=1,
+                                             dtype=jnp.uint32)
+        telemetry.emit(**counters)
 
     # ---- learned-graph views ----------------------------------------------
 

@@ -14,13 +14,12 @@ from __future__ import annotations
 import collections
 import dataclasses
 import math
-import warnings
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.core import admm, compression, vr
+from repro.core import vr
 from repro.core.schedule import build_graph
 from repro.core.solver import make_solver, solver_entry
 from repro.launch import sharding as shd
@@ -72,8 +71,6 @@ class TrainRecipe:
     # compressor spec string ("qbit:bits=4", "randk:fraction=0.25,
     # sampler=block", ...); paper Fig.2 default: 8-bit quantizer
     compressor: str = "qbit"
-    # DEPRECATED tuple-of-pairs params, merged into ``compressor``
-    comp_kwargs: tuple = ()
     # agent graph spec — anything accepted by schedule.make_graph: a static
     # family ("ring", "grid2d", "star", "complete", "erdos:p=0.3", ...) or a
     # time-varying schedule ("cycle:ring|star", "drop:p=0.2,base=complete",
@@ -85,21 +82,6 @@ class TrainRecipe:
     # this many microbatches (lax.map) — bounds live activation memory at
     # the cost of a scan (1 = single fused pass)
     anchor_microbatches: int = 1
-
-    def compressor_spec(self) -> str:
-        """The compressor spec string, folding in the deprecated
-        ``comp_kwargs`` tuple form when present."""
-        spec = self.compressor
-        if self.comp_kwargs:
-            warnings.warn(
-                "TrainRecipe.comp_kwargs is deprecated; put params in the "
-                "compressor spec string instead (e.g. 'qbit:bits=4')",
-                DeprecationWarning,
-                stacklevel=2,
-            )
-            params = ",".join(f"{k}={v}" for k, v in self.comp_kwargs)
-            spec = spec + ("," if ":" in spec else ":") + params
-        return spec
 
     def solver_defaults(self, solver_name: str) -> dict:
         """Fallback params for ``make_solver`` (spec params override;
@@ -113,34 +95,12 @@ class TrainRecipe:
                 "eta": self.eta,
                 "tau": self.tau,
                 "batch_size": self.batch_size,
-                "compressor": self.compressor_spec(),
+                "compressor": self.compressor,
             }
         return {
             "batch_size": self.batch_size,
-            "compressor": self.compressor_spec(),
+            "compressor": self.compressor,
         }
-
-    def admm_config(self):
-        """DEPRECATED: construct through ``solver.make_solver`` (the
-        ``ltadmm`` entry) instead."""
-        warnings.warn(
-            "TrainRecipe.admm_config() is deprecated; build an LT-ADMM "
-            "solver via core.solver.make_solver('ltadmm:...') instead",
-            DeprecationWarning,
-            stacklevel=2,
-        )
-        comp = compression.get_compressor(self.compressor_spec())
-        return admm.LTADMMConfig(
-            rho=self.rho,
-            beta=self.beta,
-            gamma=self.gamma,
-            r=self.r,
-            eta=self.eta,
-            tau=self.tau,
-            batch_size=self.batch_size,
-            compressor_x=comp,
-            compressor_z=comp,
-        )
 
 
 def build_estimator(arch_def, cfg, recipe: TrainRecipe, kind: str):
@@ -274,35 +234,6 @@ def abstract_train_state(arch_def, cfg, solver):
         lambda s: jax.ShapeDtypeStruct((a,) + s.shape, s.dtype), ap
     )
     return solver.abstract_state(x_sds)
-
-
-# ---- deprecation shims over the unified API --------------------------------
-
-
-def build_admm_train(arch_def, cfg, mesh, recipe: TrainRecipe):
-    """DEPRECATED: use ``build_train(arch, cfg, mesh, "ltadmm", recipe)``.
-
-    Returns the old 5-tuple (step_fn, state_sharding, init_fn, graph,
-    acfg) on top of the unified builder."""
-    warnings.warn(
-        "build_admm_train is deprecated; use "
-        "build_train(arch, cfg, mesh, 'ltadmm', recipe)",
-        DeprecationWarning,
-        stacklevel=2,
-    )
-    step_fn, state_ps, init_fn, solver = build_train(
-        arch_def, cfg, mesh, "ltadmm", recipe
-    )
-    return step_fn, state_ps, init_fn, solver.graph, solver.cfg
-
-
-def admm_abstract_state(arch_def, cfg, acfg, graph):
-    """DEPRECATED: use ``abstract_train_state(arch, cfg, solver)``."""
-    from repro.core.solver import LTADMMSolver
-
-    solver = LTADMMSolver(graph=graph, exchange=None, grad_est=None,
-                          cfg=acfg)
-    return abstract_train_state(arch_def, cfg, solver)
 
 
 # ---------------------------------------------------------------------------

@@ -20,6 +20,17 @@ agent's params for the round (asynchronous-ADMM semantics).
         --rounds 20 --topology-schedule drop:p=0.25,base=complete
     PYTHONPATH=src python -m repro.launch.train --smoke --agents 4 \
         --rounds 20 --solver choco:lr=0.02 --topology ring
+
+Observability: ``--telemetry`` wraps the solver in the in-trace counter
+plane (``repro.obs.telemetry``) — measured wire bytes, messages,
+fault-plane rejects, participation and gradient evaluations accumulate
+on-device in the scanned state (no host syncs, trajectories unchanged)
+and print as one JSON line at the end.  ``--trace out.json`` writes
+wall-clock spans (build, per-chunk execute with a cold-compile marker,
+checkpoints, watchdog rollbacks) as Chrome-trace JSONL — load it in
+Perfetto or summarize with ``python -m repro.obs.summary out.json``;
+``--trace-profile DIR`` additionally attaches the jax.profiler device
+trace over the same window.
 """
 from __future__ import annotations
 
@@ -51,6 +62,7 @@ from repro.launch.steps import (
     model_specs,
 )
 from repro.models.common import init_params, param_count
+from repro.obs import telemetry, trace
 
 
 def build(args):
@@ -149,11 +161,30 @@ def main():
     ap.add_argument("--log-every", type=int, default=1,
                     help="rounds per jitted scan chunk (one host dispatch "
                          "and one metrics eval per chunk; raise for speed)")
+    ap.add_argument("--telemetry", action="store_true",
+                    help="accumulate in-trace counters (wire bytes, "
+                         "messages, fault rejects, participation, grad "
+                         "evals) in the solver state; printed as one JSON "
+                         "line at the end — trajectories unchanged")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write wall-clock spans (build, chunks, "
+                         "checkpoints, rollbacks) as Chrome-trace JSONL; "
+                         "summarize with python -m repro.obs.summary PATH")
+    ap.add_argument("--trace-profile", default=None, metavar="DIR",
+                    help="with --trace: also capture a jax.profiler "
+                         "device trace into DIR over the run")
     args = ap.parse_args()
     if args.checkpoint_every and not args.checkpoint:
         ap.error("--checkpoint-every requires --checkpoint PATH")
+    if args.trace_profile and not args.trace:
+        ap.error("--trace-profile requires --trace PATH")
 
-    arch, cfg, solver, loss = build(args)
+    tracer = (trace.Tracer(args.trace, args.trace_profile)
+              if args.trace else trace.NULL)
+    with tracer.span("build", arch=args.arch, solver=args.solver):
+        arch, cfg, solver, loss = build(args)
+    if args.telemetry:
+        solver = telemetry.with_telemetry(solver)
     ds = SyntheticLMDataset(
         vocab=cfg.vocab, seq_len=args.seq_len, n_agents=args.agents,
         m_local=args.m_local, heterogeneity=args.heterogeneity,
@@ -231,42 +262,61 @@ def main():
     watchdog = (DivergenceWatchdog(blowup=args.watchdog_blowup)
                 if args.watchdog_blowup > 0 else None)
     t_start = time.time()
-    while done < args.rounds:
-        n = min(args.log_every, args.rounds - done)
-        state = run_chunk(state, jnp.int32(done), n)
-        done += n
-        ml = mean_loss(state)
-        if watchdog is not None:
-            state, rolled_back = watchdog.observe(state, ml)
-            if rolled_back:
-                # skip-ahead: restore last-good state but keep advancing
-                # rounds — rewinding would deterministically replay the
-                # same divergence
-                print(json.dumps({
-                    "round": done - 1, "watchdog": "rollback",
-                    "mean_loss": ml, "rollbacks": watchdog.rollbacks,
-                }))
-                continue
-        print(json.dumps({
-            "round": done - 1,
-            "mean_loss": round(ml, 4),
-            "consensus_err": float(
-                consensus_error(solver.consensus_params(state))
-            ),
-            "wall_s": round(time.time() - t_start, 1),
-        }))
-        if (args.checkpoint_every and done < args.rounds
-                and done % args.checkpoint_every == 0):
-            save_checkpoint(args.checkpoint + ".state", state, step=done,
-                            extra={"arch": args.arch, "smoke": args.smoke,
-                                   "solver": args.solver})
-    if args.checkpoint:
-        x = solver.consensus_params(state)
-        pbar = jax.tree.map(lambda t: jnp.mean(t, axis=0), x)
-        save_checkpoint(args.checkpoint, pbar, step=args.rounds,
+    cold = True
+    try:
+        while done < args.rounds:
+            n = min(args.log_every, args.rounds - done)
+            with tracer.span("chunk", first_round=done, rounds=n,
+                             cold=cold):
+                state = run_chunk(state, jnp.int32(done), n)
+                if tracer is not trace.NULL:
+                    jax.block_until_ready(state)
+            cold = False
+            done += n
+            ml = mean_loss(state)
+            if watchdog is not None:
+                state, rolled_back = watchdog.observe(state, ml)
+                if rolled_back:
+                    # skip-ahead: restore last-good state but keep
+                    # advancing rounds — rewinding would
+                    # deterministically replay the same divergence
+                    tracer.instant("watchdog-rollback", round=done - 1,
+                                   mean_loss=ml)
+                    print(json.dumps({
+                        "round": done - 1, "watchdog": "rollback",
+                        "mean_loss": ml, "rollbacks": watchdog.rollbacks,
+                    }))
+                    continue
+            print(json.dumps({
+                "round": done - 1,
+                "mean_loss": round(ml, 4),
+                "consensus_err": float(
+                    consensus_error(solver.consensus_params(state))
+                ),
+                "wall_s": round(time.time() - t_start, 1),
+            }))
+            if (args.checkpoint_every and done < args.rounds
+                    and done % args.checkpoint_every == 0):
+                with tracer.span("checkpoint", round=done):
+                    save_checkpoint(
+                        args.checkpoint + ".state", state, step=done,
                         extra={"arch": args.arch, "smoke": args.smoke,
                                "solver": args.solver})
-        print(f"# checkpoint written to {args.checkpoint}")
+        if args.telemetry:
+            tel = {k: np.asarray(v).tolist()
+                   for k, v in telemetry.counters(state).items()}
+            print(json.dumps({"telemetry": tel}))
+        if args.checkpoint:
+            x = solver.consensus_params(state)
+            pbar = jax.tree.map(lambda t: jnp.mean(t, axis=0), x)
+            with tracer.span("checkpoint", round=args.rounds):
+                save_checkpoint(
+                    args.checkpoint, pbar, step=args.rounds,
+                    extra={"arch": args.arch, "smoke": args.smoke,
+                           "solver": args.solver})
+            print(f"# checkpoint written to {args.checkpoint}")
+    finally:
+        tracer.close()
 
 
 if __name__ == "__main__":

@@ -1,0 +1,18 @@
+"""Observability: in-trace telemetry counters + wall-clock span tracing.
+
+Two layers, importable without touching the hot path:
+
+* ``obs.telemetry`` — a typed counter pytree that rides the scanned
+  round's carry (no host syncs, no trajectory changes); solvers opt in
+  via ``with_telemetry(solver)``.
+* ``obs.trace`` — wall-clock spans emitted as Chrome-trace/Perfetto
+  JSONL (``Tracer``), plus the shared ``timeit`` microbenchmark helper.
+  ``python -m repro.obs.summary out.json`` prints a per-phase report.
+"""
+from repro.obs.telemetry import (  # noqa: F401
+    Telemetry,
+    TelemetryState,
+    counters,
+    with_telemetry,
+)
+from repro.obs.trace import Tracer, timeit  # noqa: F401

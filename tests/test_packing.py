@@ -316,12 +316,9 @@ def test_round_cost_hooks():
     full = vr.FullGrad(full_grad=lambda p, d: p)
     cold = solver.make_solver("cold:lr=0.1", graph, ex, full)
     assert cold.round_cost(cm, 100) == 100 * cm.t_g + cm.t_comm
-    # degree awareness rides through CostModel.for_topology, and the
-    # deprecated name-keyed shim agrees with the solver hook
+    # degree awareness rides through CostModel.for_topology
     cm5 = CostModel.for_topology(Complete(5))
     lead5 = solver.make_solver("lead:lr=0.1",
                                *build_graph("complete", 5), SGD_TREE)
-    with pytest.warns(DeprecationWarning, match="per_iteration"):
-        assert cm5.per_iteration("lead", 100) == pytest.approx(
-            lead5.round_cost(cm5, 100)
-        )
+    assert lead5.round_cost(cm5, 100) == pytest.approx(
+        cm5.t_grad + cm5.t_comm)

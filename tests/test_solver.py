@@ -1,11 +1,8 @@
 """Unified Solver protocol + registry: spec-string round-trips, golden
-parity with the pre-refactor implementations, deprecation shims, and the
-perf-regression gate."""
+parity with the pre-refactor implementations, and the perf-regression
+gate."""
 import json
 import os
-import subprocess
-import sys
-import warnings
 
 import jax
 import jax.numpy as jnp
@@ -15,7 +12,6 @@ import pytest
 from repro.core import admm, compression, solver, vr
 from repro.core.schedule import drop_schedule
 from repro.core.topology import Complete, Exchange, Ring
-from repro.launch.steps import TrainRecipe
 from repro.problems.logistic import LogisticProblem
 
 PROB = LogisticProblem()
@@ -212,73 +208,6 @@ def test_golden_parity_with_pre_refactor_trajectories(name):
     np.testing.assert_allclose(got, want, atol=0.5)
 
 
-# ---------------------------------------------------------------------------
-# Deprecation shims
-# ---------------------------------------------------------------------------
-
-
-def test_admm_config_shim_warns_and_matches_registry():
-    recipe = TrainRecipe(tau=3, compressor="qbit:bits=4")
-    with pytest.warns(DeprecationWarning, match="admm_config"):
-        cfg = recipe.admm_config()
-    s = solver.make_solver(
-        "ltadmm", TOPO, EX, _saga(),
-        defaults=recipe.solver_defaults("ltadmm"),
-    )
-    assert cfg == s.cfg
-    # identical config => identical trajectory through the legacy
-    # admm-module entry points vs the unified solver
-    x0 = jnp.zeros((PROB.n_agents, PROB.n))
-    est = _saga()
-    st_old = admm.init(cfg, TOPO, EX, x0)
-    st_new = s.init(x0)
-    for i in range(3):
-        st_old = admm.step(cfg, TOPO, EX, est, st_old, DATA,
-                           jax.random.key(i))
-        st_new = s.step(st_new, DATA, jax.random.key(i))
-    for a, b in zip(jax.tree.leaves(st_old), jax.tree.leaves(st_new)):
-        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
-
-
-def test_comp_kwargs_shim_warns_and_merges():
-    recipe = TrainRecipe(compressor="qbit", comp_kwargs=(("bits", 4),))
-    with pytest.warns(DeprecationWarning, match="comp_kwargs"):
-        spec = recipe.compressor_spec()
-    assert compression.get_compressor(spec) == \
-        compression.BBitQuantizer(bits=4)
-    # no warning on the spec-string form
-    with warnings.catch_warnings():
-        warnings.simplefilter("error")
-        assert TrainRecipe(compressor="qbit:bits=4").compressor_spec() \
-            == "qbit:bits=4"
-
-
-def test_per_iteration_shim_warns_and_delegates():
-    """CostModel.per_iteration warns DeprecationWarning and returns
-    exactly what the registered solver's round_cost hook computes —
-    including the COLD/DPDC full-gradient variants (FullGrad estimator
-    <-> full_grad=True)."""
-    from repro.core.baselines import ALL_BASELINES
-    from repro.core.costmodel import CostModel
-
-    cm = CostModel.for_topology(TOPO)
-    full = vr.FullGrad(full_grad=PROB.full_grad)
-    for name in ALL_BASELINES:
-        s = solver.make_solver(f"{name}:lr=0.1", TOPO, EX, SGD)
-        with pytest.warns(DeprecationWarning, match="per_iteration"):
-            assert cm.per_iteration(name, PROB.m) == pytest.approx(
-                s.round_cost(cm, PROB.m)
-            )
-    for name in ("cold", "dpdc"):
-        s = solver.make_solver(f"{name}:lr=0.1", TOPO, EX, full)
-        with pytest.warns(DeprecationWarning, match="per_iteration"):
-            assert cm.per_iteration(name, PROB.m, full_grad=True) == \
-                pytest.approx(s.round_cost(cm, PROB.m))
-    with pytest.warns(DeprecationWarning, match="per_iteration"):
-        with pytest.raises(ValueError):
-            cm.per_iteration("ltadmm", PROB.m)
-
-
 @pytest.mark.parametrize("name", sorted(ROUNDTRIP_SPECS))
 def test_wire_bytes_honors_explicit_t_on_static_graphs(name):
     """Regression: an explicit ``t`` used to be silently ignored on
@@ -328,23 +257,6 @@ def test_ltadmm_wire_bytes_t_agrees_with_admm_module():
         for t in range(sched.period)
     ]
     assert len(set(per_round)) > 1  # drop schedule varies by round
-
-
-@pytest.mark.slow
-def test_build_admm_train_shim_identical_trajectory():
-    """build_admm_train warns DeprecationWarning and produces the same
-    states/shardings as build_train(..., 'ltadmm', ...) — checked in a
-    4-device subprocess (the builder needs a real agent mesh axis)."""
-    script = os.path.join(os.path.dirname(__file__),
-                          "_solver_shim_check.py")
-    res = subprocess.run(
-        [sys.executable, script],
-        capture_output=True, text=True, timeout=1200,
-        env={**os.environ,
-             "PYTHONPATH": os.pathsep.join(sys.path)},
-    )
-    assert res.returncode == 0, res.stdout + res.stderr
-    assert "SHIM-CHECK OK" in res.stdout, res.stdout
 
 
 # ---------------------------------------------------------------------------

@@ -213,10 +213,7 @@ def test_costmodel_degree_aware():
     assert star.mean_degree == pytest.approx(1.8)
     assert star.lt_admm_cc(100, 5) == pytest.approx(104 + 2 * 10 * 0.9)
     comp = CostModel.for_topology(T.Complete(5))  # mean degree 4
-    with pytest.warns(DeprecationWarning, match="per_iteration"):
-        assert comp.per_iteration("lead", 100) == pytest.approx(
-            1 + 10 * 2.0
-        )
+    assert comp.lead(1) == pytest.approx(1 + 10 * 2.0)
 
 
 def test_wire_bytes_degree_aware():
